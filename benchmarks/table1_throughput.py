@@ -1,0 +1,26 @@
+"""Paper Table I: throughput / MACs / utilisation of the accelerator.
+
+Derived from the cycle model in ``core.analysis`` (the same tile geometry
+the executors run) and compared against the published design point.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.analysis import PAPER_CLAIMS, pe_throughput_model
+
+
+def rows():
+    t0 = time.perf_counter()
+    pe = pe_throughput_model()
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("table1.mpix_per_s", us,
+         f"{pe['mpix_s_at_target']:.1f} (paper {PAPER_CLAIMS['throughput_mpix_s']})"),
+        ("table1.fps_capacity", us, f"{pe['fps_capacity']:.1f} (target 60)"),
+        ("table1.num_macs", us, f"{pe['num_macs']} (paper {PAPER_CLAIMS['num_macs']})"),
+        ("table1.utilization", us,
+         f"{pe['utilization']:.3f} (paper {PAPER_CLAIMS['utilization']})"),
+        ("table1.cycles_per_frame", us, f"{pe['cycles_per_frame']}"),
+    ]

@@ -1,0 +1,29 @@
+"""Paper Table II: on-chip buffer sizes, tilted vs classical fusion."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.analysis import (
+    PAPER_TABLE2,
+    buffer_sizes,
+    classical_buffer_sizes,
+)
+
+
+def rows():
+    t0 = time.perf_counter()
+    t = buffer_sizes()
+    c = classical_buffer_sizes()
+    us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for key, paper_key in [("ping_pong_kb", "ping_pong"), ("overlap_kb", "overlap"),
+                           ("residual_kb", "residual"), ("weight_kb", "weight"),
+                           ("total_kb", "total")]:
+        out.append((f"table2.tilted.{paper_key}", us,
+                    f"{t[key]:.2f}KB (paper {PAPER_TABLE2['tilted'][paper_key]})"))
+    out.append(("table2.classical.total", us,
+                f"{c['total_kb']:.2f}KB (paper {PAPER_TABLE2['classical']['total']})"))
+    out.append(("table2.saving", us,
+                f"{(1 - t['total_kb'] / c['total_kb']) * 100:.1f}% (paper ~60%)"))
+    return out

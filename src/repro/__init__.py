@@ -1,0 +1,20 @@
+"""repro — Tilted Layer Fusion (ISCAS 2022) as a JAX/TPU framework.
+
+Reproduction + beyond of "A Real Time Super Resolution Accelerator with
+Tilted Layer Fusion" (Huang, Hsu, Chang): the tilted layer-fusion dataflow
+as a composable JAX module and Pallas TPU kernel, embedded in a multi-pod
+training/serving framework with 10 assigned LM-family architectures.
+
+Layout:
+  repro.core         — the paper's contribution (tiling, fusion, analysis)
+  repro.kernels      — Pallas TPU kernels + jnp oracles
+  repro.models       — ABPN + transformer/MoE/SSM/enc-dec/VLM model zoo
+  repro.layers       — shared NN layers
+  repro.configs      — assigned architecture configs (``get_config``)
+  repro.distributed  — partitioning rules, step functions, grad sync
+  repro.data / repro.optim / repro.runtime — substrate
+  repro.launch       — mesh, dry-run, train/serve CLIs
+  repro.roofline     — compiled-HLO roofline analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: tilted layer fusion."""
+
+from repro.core.fusion import (
+    ConvLayer,
+    conv_stack_reference,
+    run_banded,
+    tilted_fused_band,
+)
+from repro.core.tiling import TileSchedule, make_schedule
+
+__all__ = [
+    "ConvLayer",
+    "conv_stack_reference",
+    "run_banded",
+    "tilted_fused_band",
+    "TileSchedule",
+    "make_schedule",
+]

@@ -1,0 +1,233 @@
+"""Analytic hardware models reproducing the paper's §IV analysis.
+
+Everything here is *derived from the implementation geometry* (the same
+``TileSchedule`` the executors use), then checked against the paper's
+published numbers:
+
+* :func:`buffer_sizes`        — eqs. (1)-(3) -> Table II (102.36 KB total)
+* :func:`classical_buffer_sizes` — the 60x60-tile classical-fusion column
+* :func:`dram_traffic`        — 5.03 GB/s layerwise vs 0.41 GB/s fused (−92%)
+* :func:`pe_throughput_model` — 1260-MAC vectorwise dataflow -> Table I
+  (FHD @ >60 fps at 600 MHz, ~87% MAC utilisation)
+
+NOTE on units: the paper uses decimal KB (1 KB = 1000 B) — with that
+convention its ping-pong (26.88), overlap (30.24) and residual (2.7) entries
+are *bit-exact* against eqs. (1)-(3); we follow the same convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+__all__ = [
+    "ABPN_CHANNELS",
+    "HWConfig",
+    "weight_bytes",
+    "buffer_sizes",
+    "classical_buffer_sizes",
+    "dram_traffic",
+    "pe_throughput_model",
+    "PAPER_TABLE2",
+    "PAPER_CLAIMS",
+]
+
+# Feature-map channel counts F_0..F_7 of ABPN as used by the paper:
+# input RGB -> 6x (3x3 conv, 28ch, ReLU) -> 3x3 conv, 27ch (= 3 * 3^2 for the
+# x3 pixel shuffle).
+ABPN_CHANNELS: List[int] = [3, 28, 28, 28, 28, 28, 28, 27]
+
+# Published numbers we reproduce (decimal KB).
+PAPER_TABLE2 = {
+    "tilted": {
+        "weight": 42.54,
+        "ping_pong": 26.88,
+        "overlap": 30.24,
+        "residual": 2.7,
+        "total": 102.36,
+    },
+    "classical": {
+        "weight": 42.54,
+        "ping_pong": 201.6,
+        "overlap": 0.0,
+        "residual": 10.8,
+        "total": 254.94,
+    },
+}
+
+PAPER_CLAIMS = {
+    "dram_layerwise_gb_s": 5.03,
+    "dram_fused_gb_s": 0.41,
+    "dram_reduction": 0.92,
+    "throughput_mpix_s": 124.4,
+    "num_macs": 1260,
+    "clock_mhz": 600,
+    "utilization": 0.87,
+    "sram_kb": 102.36,
+    "lr_size": (360, 640),
+    "hr_size": (1080, 1920),
+    "fps": 60,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    """Accelerator configuration (defaults = the paper's design point)."""
+
+    band_rows: int = 60  # R
+    tile_cols: int = 8  # C
+    channels: Sequence[int] = tuple(ABPN_CHANNELS)  # F_0..F_L
+    bytes_per_elem: int = 1  # 8-bit activations/weights
+    overlap_queue_slots: int | None = None  # default L+2 (paper §IV-A.2 prose)
+    # PE array (paper §III-B): 28 blocks x 3 arrays x (5 rows x 3 taps) MACs
+    pe_blocks: int = 28
+    pe_rows: int = 5
+    clock_hz: float = 600e6
+    lr_height: int = 360
+    lr_width: int = 640
+    scale: int = 3
+    fps: float = 60.0
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.channels) - 1
+
+    @property
+    def max_channels(self) -> int:
+        return max(self.channels)
+
+    @property
+    def num_macs(self) -> int:
+        # 3 PE arrays per block finish a 3x3 conv column per cycle
+        return self.pe_blocks * 3 * (self.pe_rows * 3)
+
+
+def weight_bytes(cfg: HWConfig = HWConfig(), include_bias: bool = True) -> int:
+    """3x3 conv weight (+bias) storage for the fused stack."""
+    ch = cfg.channels
+    w = sum(9 * ch[i] * ch[i + 1] for i in range(cfg.num_layers))
+    b = sum(ch[1:]) if include_bias else 0
+    return (w + b) * cfg.bytes_per_elem
+
+
+def buffer_sizes(cfg: HWConfig = HWConfig()) -> Dict[str, float]:
+    """Paper eqs. (1)-(3): on-chip buffer bytes for tilted layer fusion.
+
+    Returns decimal-KB entries matching Table II's row names.
+    """
+    R, C, L = cfg.band_rows, cfg.tile_cols, cfg.num_layers
+    chmax, ch0 = cfg.max_channels, cfg.channels[0]
+    slots = cfg.overlap_queue_slots if cfg.overlap_queue_slots is not None else L + 2
+    bpe = cfg.bytes_per_elem
+    ping_pong = 2 * R * C * chmax * bpe  # eq. (1), x2 buffers
+    overlap = slots * R * 2 * chmax * bpe  # eq. (2) with the RTL's L+2 slots
+    residual = ch0 * R * (C + L) * bpe  # eq. (3)
+    weights = weight_bytes(cfg)
+    return {
+        "weight_kb": weights / 1000,
+        "ping_pong_kb": ping_pong / 1000,
+        "overlap_kb": overlap / 1000,
+        "residual_kb": residual / 1000,
+        "total_kb": (ping_pong + overlap + residual + weights) / 1000,
+    }
+
+
+def classical_buffer_sizes(
+    cfg: HWConfig = HWConfig(), tile_rows: int = 60, tile_cols: int = 60
+) -> Dict[str, float]:
+    """Classical (rectangular-tile) layer fusion buffer cost, per §IV-A.
+
+    The classical scheme needs a 60x60 tile to amortise the boundary
+    information loss that the tilt eliminates; there is no overlap buffer,
+    but the ping-pong and residual buffers scale with the full tile area.
+    """
+    bpe = cfg.bytes_per_elem
+    ping_pong = 2 * tile_rows * tile_cols * cfg.max_channels * bpe
+    residual = cfg.channels[0] * tile_rows * tile_cols * bpe
+    weights = weight_bytes(cfg)
+    return {
+        "weight_kb": weights / 1000,
+        "ping_pong_kb": ping_pong / 1000,
+        "overlap_kb": 0.0,
+        "residual_kb": residual / 1000,
+        "total_kb": (ping_pong + residual + weights) / 1000,
+    }
+
+
+def dram_traffic(cfg: HWConfig = HWConfig(), mode: str = "fused") -> Dict[str, float]:
+    """Off-chip traffic model (paper §IV-B: 5.03 -> 0.41 GB/s, −92%).
+
+    * ``layerwise`` — every intermediate feature map is written to DRAM and
+      read back by the next layer (the [11]/[12] execution style).
+    * ``fused``     — tilted layer fusion: only the input image, the output
+      residual-added pixels and the weights cross the chip boundary; all
+      intermediates live in the ping-pong/overlap SRAM (VMEM on TPU).
+    """
+    pix = cfg.lr_height * cfg.lr_width
+    ch = cfg.channels
+    bpe = cfg.bytes_per_elem
+    in_bytes = pix * ch[0] * bpe
+    out_bytes = pix * ch[-1] * bpe  # 27ch LR == 3ch HR after pixel shuffle
+    w_bytes = weight_bytes(cfg)
+    if mode == "layerwise":
+        # write + read every intermediate F_1..F_{L-1}; F_L written once
+        inter = sum(pix * c * bpe for c in ch[1:-1])
+        per_frame = in_bytes + 2 * inter + out_bytes + w_bytes
+    elif mode == "fused":
+        per_frame = in_bytes + out_bytes + w_bytes
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    gb_s = per_frame * cfg.fps / 1e9
+    return {"bytes_per_frame": per_frame, "gb_s": gb_s}
+
+
+def dram_reduction(cfg: HWConfig = HWConfig()) -> float:
+    """Fractional DRAM-bandwidth reduction of fused vs layerwise (≈0.92)."""
+    lw = dram_traffic(cfg, "layerwise")["gb_s"]
+    fu = dram_traffic(cfg, "fused")["gb_s"]
+    return 1.0 - fu / lw
+
+
+def pe_throughput_model(cfg: HWConfig = HWConfig()) -> Dict[str, float]:
+    """Cycle model of the vectorwise dataflow (paper §III-B/D -> Table I).
+
+    Per cycle, the 28 PE blocks each process one *input* channel; the
+    accumulator tree reduces them into one output channel's 5-row x 1-column
+    segment with the full 3x3 receptive field (3 PE arrays cover the three
+    weight columns).  Hence per tile and layer:
+
+        cycles = C columns x ceil(R / 5) row groups x Ch_out
+
+    Utilisation loss comes from layers with fewer than 28 input channels
+    (layer 1 has 3) and from epilogue tiles — reproducing the paper's
+    "average of 87% hardware utilization".
+    """
+    from repro.core.tiling import make_schedule
+
+    R, C, L = cfg.band_rows, cfg.tile_cols, cfg.num_layers
+    ch = cfg.channels
+    sched = make_schedule(width=cfg.lr_width, tile_cols=C, num_layers=L)
+    bands = math.ceil(cfg.lr_height / R)
+    tiles_per_band = sched.num_tiles  # includes the tilt-flush epilogue
+    row_groups = math.ceil(R / cfg.pe_rows)
+    cycles_per_tile = sum(C * row_groups * ch[l + 1] for l in range(L))
+    cycles_per_frame = bands * tiles_per_band * cycles_per_tile
+
+    # MACs actually used: 9 taps x Ci x Co per output pixel, valid pixels only
+    pix = cfg.lr_height * cfg.lr_width
+    macs_per_frame = sum(9 * ch[l] * ch[l + 1] * pix for l in range(L))
+    util = macs_per_frame / (cfg.num_macs * cycles_per_frame)
+
+    fps = cfg.clock_hz / cycles_per_frame
+    hr_pix = pix * cfg.scale * cfg.scale
+    return {
+        "cycles_per_frame": cycles_per_frame,
+        "fps_capacity": fps,
+        "meets_60fps": fps >= 60.0,
+        "mpix_s_capacity": hr_pix * fps / 1e6,
+        "mpix_s_at_target": hr_pix * min(fps, cfg.fps) / 1e6,
+        "utilization": util,
+        "num_macs": cfg.num_macs,
+        "clock_mhz": cfg.clock_hz / 1e6,
+    }

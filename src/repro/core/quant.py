@@ -1,0 +1,111 @@
+"""Symmetric int8 quantisation (ABPN ships 8-bit weights; paper §I).
+
+The accelerator stores 8-bit weights, biases and activations.  We model the
+same numerics in JAX:
+
+* :func:`quantize` / :func:`dequantize` — symmetric int8 with per-tensor or
+  per-channel scales.
+* :func:`fake_quant` — straight-through-estimator fake quantisation for
+  quantisation-aware training (used by ``examples/train_abpn.py``).
+* :func:`quantize_layers` — converts a float ``ConvLayer`` stack into an
+  int8-weight stack with dequant-on-read semantics (what the PE array sees).
+
+This module is also reused by the gradient-compression path
+(``distributed/grad_sync.py``) — int8-with-error-feedback is the same
+primitive applied to gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import ConvLayer
+
+__all__ = [
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "QuantizedConvLayer",
+    "quantize_layers",
+    "dequantize_layers",
+]
+
+_EPS = 1e-12
+
+
+def _scale_for(x: jax.Array, axis: Optional[Tuple[int, ...]]) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, _EPS) / 127.0
+
+
+def quantize(
+    x: jax.Array, axis: Optional[Tuple[int, ...]] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantisation.
+
+    Args:
+      x: float array.
+      axis: axes to REDUCE when computing the scale. ``None`` = per-tensor;
+        e.g. for HWIO conv weights, ``axis=(0, 1, 2)`` gives per-output-
+        channel scales.
+
+    Returns:
+      (q, scale) with ``q`` int8 and ``x ≈ q * scale``.
+    """
+    scale = _scale_for(x, axis)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def fake_quant(x: jax.Array, axis: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Quantise-dequantise with a straight-through gradient (QAT)."""
+    scale = _scale_for(x, axis)
+    q = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+@dataclasses.dataclass
+class QuantizedConvLayer:
+    """int8 storage form of a :class:`ConvLayer` (per-out-channel scales)."""
+
+    wq: jax.Array  # (3, 3, Ci, Co) int8
+    w_scale: jax.Array  # (1, 1, 1, Co)
+    bq: jax.Array  # (Co,) int32 (bias kept wide, as accumulators are)
+    b_scale: jax.Array  # ()
+    relu: bool = True
+
+
+jax.tree_util.register_dataclass(
+    QuantizedConvLayer,
+    data_fields=["wq", "w_scale", "bq", "b_scale"],
+    meta_fields=["relu"],
+)
+
+
+def quantize_layers(layers: Sequence[ConvLayer]) -> List[QuantizedConvLayer]:
+    out = []
+    for l in layers:
+        wq, ws = quantize(l.w, axis=(0, 1, 2))
+        bs = jnp.maximum(jnp.max(jnp.abs(l.b)), _EPS) / (2**23)  # wide bias
+        bq = jnp.round(l.b / bs).astype(jnp.int32)
+        out.append(QuantizedConvLayer(wq=wq, w_scale=ws, bq=bq, b_scale=bs, relu=l.relu))
+    return out
+
+
+def dequantize_layers(qlayers: Sequence[QuantizedConvLayer], dtype=jnp.float32) -> List[ConvLayer]:
+    return [
+        ConvLayer(
+            w=dequantize(q.wq, q.w_scale, dtype),
+            b=dequantize(q.bq, q.b_scale, dtype),
+            relu=q.relu,
+        )
+        for q in qlayers
+    ]

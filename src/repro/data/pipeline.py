@@ -1,0 +1,92 @@
+"""Input pipeline: deterministic generation + background prefetch + sharding.
+
+``Prefetcher`` overlaps host-side batch synthesis with device compute via a
+bounded queue on a worker thread (double buffering by default — the same
+role the paper's DMA/ping-pong input staging plays).  When a mesh context
+is active, batches are placed with their logical-axis NamedShardings so
+jit steps consume them without host round-trips.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.distributed import partitioning as pt
+
+__all__ = ["Prefetcher", "make_lm_stream"]
+
+
+class Prefetcher:
+    """Bounded background prefetch over a step-indexed batch function."""
+
+    def __init__(
+        self,
+        batch_fn: Callable[[int], Dict],
+        start_step: int = 0,
+        depth: int = 2,
+        place: Optional[Callable] = None,
+    ):
+        self._fn = batch_fn
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._place = place
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._fn(step)
+            if self._place is not None:
+                batch = self._place(batch)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+def make_lm_stream(cfg, batch: int, seq: int, seed: int = 0, start_step: int = 0,
+                   batch_axes: Optional[Dict] = None) -> Prefetcher:
+    from repro.data.synthetic import lm_batch
+
+    place = None
+    mesh = pt.current_mesh()
+    if mesh is not None and batch_axes:
+        def place(b):
+            return {
+                k: jax.device_put(
+                    v,
+                    jax.sharding.NamedSharding(
+                        mesh, pt.shape_aware_spec(batch_axes[k], v.shape)
+                    ),
+                )
+                for k, v in b.items()
+            }
+
+    return Prefetcher(
+        lambda s: lm_batch(cfg, s, batch, seq, seed), start_step=start_step,
+        place=place,
+    )

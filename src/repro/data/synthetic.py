@@ -1,0 +1,73 @@
+"""Deterministic synthetic data: LM token streams and SR image pairs.
+
+Every batch is a pure function of (seed, step) — restarts and elastic
+re-shards reproduce the exact same stream, which the fault-tolerance tests
+rely on.  The SR pair generator produces band-limited textures (filtered
+noise) so that bicubic-ish downsampling leaves learnable structure; ABPN
+training on these pairs shows real PSNR gains in a few hundred steps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["lm_batch", "sr_pair_batch", "downsample"]
+
+
+def lm_batch(cfg, step: int, batch: int, seq: int, seed: int = 0) -> Dict[str, jax.Array]:
+    """Markov-ish token batch: tokens, next-token targets, mask.
+
+    Tokens follow a noisy arithmetic progression modulo vocab so there is
+    actual structure for a model to learn (loss drops well below uniform).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (batch, 1), 0, cfg.vocab_size, jnp.int32)
+    stride = jax.random.randint(k2, (batch, 1), 1, 7, jnp.int32)
+    pos = jnp.arange(seq + 1, dtype=jnp.int32)[None, :]
+    stream = (start + stride * pos) % cfg.vocab_size
+    tokens, targets = stream[:, :-1], stream[:, 1:]
+    return {
+        "tokens": tokens,
+        "targets": targets,
+        "mask": jnp.ones_like(tokens),
+    }
+
+
+def _smooth_noise(key, h: int, w: int, c: int, octaves: int = 3) -> jax.Array:
+    """Band-limited texture in [0, 1]: sum of upsampled noise octaves."""
+    img = jnp.zeros((h, w, c))
+    for o in range(octaves):
+        f = 2 ** (o + 2)
+        key, k = jax.random.split(key)
+        coarse = jax.random.uniform(k, (max(h // f, 1), max(w // f, 1), c))
+        img = img + jax.image.resize(coarse, (h, w, c), "bilinear") / (o + 1)
+    lo, hi = img.min(), img.max()
+    return (img - lo) / jnp.maximum(hi - lo, 1e-6)
+
+
+def downsample(hr: jax.Array, scale: int) -> jax.Array:
+    """Area (box) downsample — the LR degradation model."""
+    h, w, c = hr.shape
+    return hr.reshape(h // scale, scale, w // scale, scale, c).mean(axis=(1, 3))
+
+
+def sr_pair_batch(
+    step: int,
+    batch: int,
+    lr_shape: Tuple[int, int] = (60, 64),
+    scale: int = 3,
+    channels: int = 3,
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """(lr (B,h,w,C), hr (B,h*s,w*s,C)) pairs, deterministic in step."""
+    h, w = lr_shape
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 7), step)
+    keys = jax.random.split(key, batch)
+    hr = jnp.stack([_smooth_noise(k, h * scale, w * scale, channels) for k in keys])
+    lr = jnp.stack([downsample(im, scale) for im in hr])
+    return lr, hr

@@ -1,0 +1,1 @@
+"""Distribution: partitioning rules, step functions, gradient sync."""

@@ -1,0 +1,163 @@
+"""Step-function factories: train / prefill / decode, plus their
+logical-axis trees (the single source of truth for in/out_shardings).
+
+All factories return closures free of Python-level dynamism so that
+``jax.jit(...).lower(...)`` produces stable HLO for the dry-run, and the
+same closures execute eagerly in smoke tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES
+from repro.layers.params import param_axes, param_shapes
+from repro.models.registry import get_model
+from repro.optim.adamw import adamw_update, init_opt_state
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "train_state_axes",
+    "train_state_shapes",
+    "batch_axes",
+    "cache_axes_and_shapes",
+]
+
+
+# ----------------------------------------------------------------------
+# Train
+# ----------------------------------------------------------------------
+def make_train_step(cfg, tcfg):
+    """(state, batch) -> (state, metrics). state = {params, opt}."""
+    model = get_model(cfg)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, cfg, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        if tcfg.microbatches > 1:
+            # gradient accumulation over the leading batch dim
+            mb = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gsum = carry
+                _, metrics, grads = compute_grads(state["params"], mbatch)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return gsum, metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            gsum, metrics = jax.lax.scan(acc_body, zeros, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            _, metrics, grads = compute_grads(state["params"], batch)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], tcfg
+        )
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_state_shapes(cfg, tcfg):
+    model = get_model(cfg)
+    p_shapes = param_shapes(model.schema(cfg), cfg.weight_dtype)
+    mdt = jnp.dtype(tcfg.optimizer_dtype)
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_shapes
+    )
+    return {
+        "params": p_shapes,
+        "opt": {"m": mom, "v": mom, "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+def train_state_axes(cfg):
+    model = get_model(cfg)
+    axes = param_axes(model.schema(cfg))
+    return {
+        "params": axes,
+        "opt": {"m": axes, "v": axes, "step": ()},
+    }
+
+
+def init_train_state(cfg, tcfg, key):
+    from repro.layers.params import init_params
+
+    model = get_model(cfg)
+    params = init_params(model.schema(cfg), key, cfg.weight_dtype)
+    return {"params": params, "opt": init_opt_state(params, jnp.dtype(tcfg.optimizer_dtype))}
+
+
+def batch_axes(cfg, shape_kind: str) -> Dict[str, Tuple]:
+    """Logical axes for each batch entry (mirrors shapes.batch_specs)."""
+    tok = ("batch", None)
+    out: Dict[str, Tuple] = {}
+    if shape_kind == "train":
+        out = {"tokens": tok, "targets": tok, "mask": tok}
+        if cfg.family == "vlm":
+            out["frontend"] = ("batch", None, "embed")
+        if cfg.family == "encdec":
+            out["src"] = ("batch", None, "embed")
+    elif shape_kind == "prefill":
+        out = {"tokens": tok}
+        if cfg.family == "vlm":
+            out["frontend"] = ("batch", None, "embed")
+        if cfg.family == "encdec":
+            out["src"] = ("batch", None, "embed")
+    elif shape_kind == "decode":
+        out = {"tokens": tok}
+    else:
+        raise ValueError(shape_kind)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Serve
+# ----------------------------------------------------------------------
+def make_prefill_step(cfg):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    model = get_model(cfg)
+
+    def decode_step(params, tokens, cache, pos):
+        return model.decode_step(params, cfg, tokens, cache, pos)
+
+    return decode_step
+
+
+def cache_axes_and_shapes(cfg, batch: int, max_len: int):
+    model = get_model(cfg)
+    if cfg.family == "encdec":
+        cs = model.cache_schema(cfg, batch, max_len, enc_len=max_len)
+    else:
+        cs = model.cache_schema(cfg, batch, max_len)
+    return param_axes(cs), param_shapes(cs, cfg.activation_dtype)

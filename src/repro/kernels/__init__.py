@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+kernels/
+  tilted_fusion.py — the paper's contribution: fused L-layer conv stack,
+                     overlap queue in persistent VMEM scratch
+  conv3x3.py       — single-layer vectorwise conv (layerwise baseline)
+  ops.py           — jit'd public wrappers (channel padding, stream layout)
+  ref.py           — pure-jnp oracles
+
+All kernels are written against real TPU semantics (pl.pallas_call +
+BlockSpec VMEM tiling, MXU matmuls, sequential-grid scratch carry) and
+validated on CPU with ``interpret=True``.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,125 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle the host-side data marshalling that the accelerator's DMA
+engine performs in the paper: channel padding to TPU-friendly widths,
+building the fresh-column stream, and undoing the output tilt.
+
+``interpret`` defaults to True on CPU backends (kernel body executed in
+Python for validation) and False on TPU (compiled to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import ConvLayer
+from repro.core.tiling import make_schedule
+from repro.kernels import conv3x3 as _conv3x3
+from repro.kernels import tilted_fusion as _tilted
+
+__all__ = ["conv3x3", "tilted_fused_stack", "pack_layers", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pack_layers(layers: Sequence[ConvLayer], chp: Optional[int] = None, dtype=None):
+    """Zero-pad a heterogeneous conv stack to uniform (L,3,3,Chp,Chp) + (L,Chp).
+
+    Padded input/output channels carry zero weights and biases, so they stay
+    identically zero through every ReLU layer — the kernel never masks
+    channels. ``chp`` defaults to max(Ch) rounded up to 8 (sublane); pass 128
+    for full MXU lane alignment (§Perf studies both).
+    """
+    chmax = max([layers[0].ci] + [l.co for l in layers])
+    chp = chp or _round_up(chmax, 8)
+    if chp < chmax:
+        raise ValueError(f"chp={chp} < max channels {chmax}")
+    dtype = dtype or layers[0].w.dtype
+    L = len(layers)
+    w = jnp.zeros((L, 3, 3, chp, chp), dtype)
+    b = jnp.zeros((L, chp), dtype)
+    for i, l in enumerate(layers):
+        w = w.at[i, :, :, : l.ci, : l.co].set(l.w.astype(dtype))
+        b = b.at[i, : l.co].set(l.b.astype(dtype))
+    return w, b, chp
+
+
+def tilted_fused_stack(
+    x: jax.Array,
+    layers: Sequence[ConvLayer],
+    *,
+    band_rows: int = 60,
+    tile_cols: int = 8,
+    chp: Optional[int] = None,
+    add_anchor: bool = False,
+    anchor_repeats: int = 9,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tilted layer fusion of a full (H, W, C0) image via the Pallas kernel.
+
+    Returns (H, W, Ch_L) features (or anchored output when ``add_anchor``),
+    numerically identical to ``ref.tilted_fused_stack_ref``.
+    """
+    H, W, C0 = x.shape
+    R, C, L = band_rows, tile_cols, len(layers)
+    if H % R != 0:
+        raise ValueError(f"height {H} must be a multiple of band_rows {R}")
+    B = H // R
+    interpret = default_interpret() if interpret is None else interpret
+    sched = make_schedule(width=W, tile_cols=C, num_layers=L)
+    K = sched.num_tiles
+    co_l = layers[-1].co
+
+    w, b, chp = pack_layers(layers, chp)
+    c0p = _round_up(C0, 8)
+
+    # Band-major layout + channel padding.
+    xb = x.reshape(B, R, W, C0)
+    xb = jnp.pad(xb, ((0, 0), (0, 0), (0, 0), (0, c0p - C0)))
+    # Fresh stream: tile k consumes input columns [k*C + 1, k*C + C].
+    xs = jnp.pad(xb, ((0, 0), (0, 0), (0, K * C + 1 - W), (0, 0)))[:, :, 1 : K * C + 1, :]
+    first_col = xb[:, :, 0:1, :]
+
+    out = _tilted.tilted_fusion_call(
+        xs,
+        first_col,
+        w,
+        b,
+        width=W,
+        tile_cols=C,
+        relu_flags=[l.relu for l in layers],
+        add_anchor=add_anchor,
+        in_channels=C0,
+        anchor_repeats=anchor_repeats,
+        interpret=interpret,
+    )
+    # Undo the tilt: tile k's block holds F_L columns [k*C - (L-1), ...+C).
+    out = out.reshape(B * R, K * C, chp)
+    out = jax.lax.slice(out, (0, L - 1, 0), (B * R, L - 1 + W, co_l))
+    return out
+
+
+def conv3x3(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    tile_cols: int = 8,
+    relu: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-layer vectorwise 3x3 conv (the layerwise-baseline datapath)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _conv3x3.conv3x3_call(
+        x, w, b, tile_cols=tile_cols, relu=relu, interpret=interpret
+    )

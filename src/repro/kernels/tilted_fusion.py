@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: tilted layer fusion (the paper's chip, one core/band).
+
+TPU-native adaptation of the accelerator (DESIGN.md §2):
+
+* HBM -> VMEM streaming replaces DRAM -> SRAM: because of the tilt, each
+  grid step consumes a *disjoint* C-column input slab — overlapping halo
+  reads are converted into clean non-overlapping ``BlockSpec`` streaming
+  (this is exactly the paper's bandwidth insight, expressed as a BlockSpec).
+* The overlap SRAM queue (paper §III-F) becomes a persistent VMEM scratch
+  array ``(L, R, 2, Chp)``: TPU grids execute sequentially, so scratch
+  carries the last two columns of every fused feature map from tile k to
+  tile k+1.  It is re-zeroed when the column index wraps (new band).
+* The residual SRAM (paper eq. 3) becomes a ``(R, C+L, Ch0)`` VMEM ring that
+  retains exactly the last C+L input columns — the anchor for tile k's
+  output is always the ring's leading C columns.
+* The 28x3x(5x3)-MAC diagonal PE array becomes 9 shifted MXU matmuls per
+  layer: ``(R*C, Chp) @ (Chp, Chp)`` — the diagonal partial-sum accumulation
+  of the vectorwise dataflow is what a systolic matmul performs internally.
+
+Channel counts are padded to a uniform ``Chp`` (multiple of 8, up to 128 for
+full MXU lanes); padded weights/biases are zero, so padded channels stay
+identically zero through ReLU — no masking needed on channels.  Phantom
+*columns* (outside the image) ARE masked every layer, which keeps the kernel
+bit-compatible with SAME-padded convolution (see ``core.tiling``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tilted_fusion_kernel", "tilted_fusion_call"]
+
+
+def _conv_tile_mxu(f, w_l, b_l, R: int, C: int, chp: int, acc_dtype):
+    """3x3 conv of one (R, C+2, Chp) slab -> (R, C, Chp) via 9 MXU matmuls."""
+    frow = jnp.pad(f, ((1, 1), (0, 0), (0, 0)))  # zero row halo (band policy)
+    acc = jnp.zeros((R * C, chp), acc_dtype)
+    for dy in range(3):
+        for dx in range(3):
+            patch = jax.lax.dynamic_slice(frow, (dy, dx, 0), (R, C, chp))
+            acc = acc + jax.lax.dot(
+                patch.reshape(R * C, chp),
+                w_l[dy, dx],
+                preferred_element_type=acc_dtype,
+            )
+    return acc.reshape(R, C, chp) + b_l[None, None, :]
+
+
+def tilted_fusion_kernel(
+    # inputs (VMEM blocks)
+    first_col_ref,  # (1, R, 1, C0p)   first real input column of the band
+    x_ref,  # (1, R, C, C0p)   fresh input stream slab for tile k
+    w_ref,  # (L, 3, 3, Chp, Chp)
+    b_ref,  # (L, Chp)
+    # outputs
+    o_ref,  # (1, R, C, Chp)
+    # scratch (persistent across sequential grid steps)
+    overlap_ref,  # (L, R, 2, Chp)
+    resid_ref,  # (R, C+L, C0p)
+    *,
+    num_layers: int,
+    width: int,
+    tile_cols: int,
+    band_rows: int,
+    chp: int,
+    c0p: int,
+    relu_flags: Sequence[bool],
+    add_anchor: bool,
+    in_channels: int,
+    anchor_repeats: int,
+    acc_dtype=jnp.float32,
+):
+    L, C, R, W = num_layers, tile_cols, band_rows, width
+    k = pl.program_id(1)  # column-tile index (fastest-varying)
+    out_dtype = o_ref.dtype
+
+    # ---- new band: reset the overlap queue and the residual ring ----
+    @pl.when(k == 0)
+    def _init():
+        overlap_ref[...] = jnp.zeros_like(overlap_ref)
+        resid_ref[...] = jnp.zeros_like(resid_ref)
+        # overlap slot for F_0 holds input columns [-1, 0]:
+        # col -1 is zero padding; col 0 is the band's first real column.
+        first = first_col_ref[0, :, 0, :]
+        overlap_ref[0, :, 1, :c0p] = first.astype(overlap_ref.dtype)
+        # residual ring: after this tile's shift-append the ring spans input
+        # columns [-L+1, C]; pre-place col 0 so it lands at ring index L-1.
+        resid_ref[:, C + L - 1, :] = first.astype(resid_ref.dtype)
+
+    fresh = x_ref[0].astype(acc_dtype)  # (R, C, C0p)
+
+    # ---- residual ring: shift left by C, append the fresh slab ----
+    if add_anchor:
+        ring = resid_ref[...]
+        ring = jnp.concatenate([ring[:, C:, :], fresh.astype(resid_ref.dtype)], axis=1)
+        resid_ref[...] = ring
+
+    # ---- input slab: 2 overlap columns ++ C fresh columns, pad channels ----
+    left0 = overlap_ref[0, :, :, :c0p].astype(acc_dtype)  # (R, 2, C0p)
+    f = jnp.concatenate([left0, fresh], axis=1)  # (R, C+2, C0p)
+    overlap_ref[0, :, :, :c0p] = f[:, -2:, :].astype(overlap_ref.dtype)
+    f = jnp.pad(f, ((0, 0), (0, 0), (0, chp - c0p)))
+
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, C, 1), 1)
+
+    for l in range(L):
+        g = _conv_tile_mxu(f, w_ref[l].astype(acc_dtype), b_ref[l].astype(acc_dtype), R, C, chp, acc_dtype)
+        if relu_flags[l]:
+            g = jnp.maximum(g, 0.0)
+        # zero phantom columns: this layer's output covers cols k*C - l + [0, C)
+        abs_cols = k * C - l + col_iota
+        g = jnp.where((abs_cols >= 0) & (abs_cols < W), g, 0.0)
+        if l < L - 1:
+            left = overlap_ref[l + 1, :, :, :].astype(acc_dtype)  # (R, 2, Chp)
+            overlap_ref[l + 1, :, :, :] = g[:, -2:, :].astype(overlap_ref.dtype)
+            f = jnp.concatenate([left, g], axis=1)  # (R, C+2, Chp)
+        else:
+            if add_anchor:
+                # anchor = input cols [kC-L+1, kC-L+C) = the ring's head,
+                # each channel repeated scale^2 times (channel-major),
+                # zero-padded up to Chp so padded channels stay clean.
+                anchor = resid_ref[:, :C, :in_channels].astype(acc_dtype)
+                anchor = jnp.repeat(anchor, anchor_repeats, axis=-1)
+                anchor = jnp.pad(
+                    anchor, ((0, 0), (0, 0), (0, chp - in_channels * anchor_repeats))
+                )
+                # phantom anchor columns must be masked like g's
+                anchor = jnp.where((abs_cols >= 0) & (abs_cols < W), anchor, 0.0)
+                g = g + anchor
+            o_ref[0] = g.astype(out_dtype)
+
+
+def tilted_fusion_call(
+    x_stream: jax.Array,  # (B, R, K*C, C0p) fresh streams per band
+    first_col: jax.Array,  # (B, R, 1, C0p)
+    w: jax.Array,  # (L, 3, 3, Chp, Chp) zero-padded weights
+    b: jax.Array,  # (L, Chp)
+    *,
+    width: int,
+    tile_cols: int,
+    relu_flags: Sequence[bool],
+    add_anchor: bool,
+    in_channels: int,
+    anchor_repeats: int = 9,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Launch the fused kernel over grid (bands, column tiles)."""
+    B, R, KC, c0p = x_stream.shape
+    L, _, _, chp, _ = w.shape
+    C = tile_cols
+    K = KC // C
+    if add_anchor and in_channels * anchor_repeats > chp:
+        raise ValueError("anchor channels exceed padded channel count")
+    out_dtype = out_dtype or x_stream.dtype
+
+    kernel = functools.partial(
+        tilted_fusion_kernel,
+        num_layers=L,
+        width=width,
+        tile_cols=C,
+        band_rows=R,
+        chp=chp,
+        c0p=c0p,
+        relu_flags=tuple(relu_flags),
+        add_anchor=add_anchor,
+        in_channels=in_channels,
+        anchor_repeats=anchor_repeats,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, R, 1, c0p), lambda bnd, k: (bnd, 0, 0, 0)),
+            pl.BlockSpec((1, R, C, c0p), lambda bnd, k: (bnd, 0, k, 0)),
+            pl.BlockSpec((L, 3, 3, chp, chp), lambda bnd, k: (0, 0, 0, 0, 0)),
+            pl.BlockSpec((L, chp), lambda bnd, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, C, chp), lambda bnd, k: (bnd, 0, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, R, KC, chp), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((L, R, 2, chp), jnp.float32),
+            pltpu.VMEM((R, C + L, c0p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(first_col, x_stream, w, b)

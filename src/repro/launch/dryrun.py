@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialisation.  Only the dry-run uses 512 placeholder
+# devices — smoke tests and benchmarks see the real single CPU device.
+# (REPRO_DRYRUN_DEVICES overrides the count for the subprocess-based tests.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from repro.configs import LM_ARCH_IDS  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.dryrun_lib import DEFAULT_OUT_DIR, run_all  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every (arch x shape x mesh)."
+    )
+    ap.add_argument("--arch", default="all",
+                    help=f"arch id or 'all' ({', '.join(LM_ARCH_IDS)})")
+    ap.add_argument("--shape", default="all",
+                    help=f"shape or 'all' ({', '.join(SHAPES)})")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT_DIR)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced configs + tiny shapes (CI smoke)")
+    ap.add_argument("--force", action="store_true", help="ignore cached cells")
+    args = ap.parse_args(argv)
+
+    archs = LM_ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ("single_pod", "multi_pod") if args.mesh == "both" else (args.mesh,)
+
+    results = run_all(archs=archs, shapes=shapes, meshes=meshes,
+                      out_dir=args.out, reduced=args.reduced,
+                      skip_existing=not args.force)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"/ {len(results)} cells")
+    for r in results:
+        if r["status"] == "error":
+            print(f"  ERROR {r['mesh']} {r['arch']} {r['shape']}: {r['error']}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""Shared NN layers (functional, schema-declared parameters)."""

@@ -1,0 +1,71 @@
+"""Shared NN primitives (norms, embeddings, losses) — functional style."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "layernorm", "embed_lookup", "cross_entropy", "silu", "act_fn"]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 statistics (matches HF Qwen/DeepSeek numerics)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], eps: float = 1e-6
+) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def embed_lookup(embedding: jax.Array, ids: jax.Array, dtype=None) -> jax.Array:
+    out = jnp.take(embedding, ids, axis=0)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def act_fn(name: str):
+    return {"silu": silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, V)
+    targets: jax.Array,  # (B, S) int32
+    mask: Optional[jax.Array] = None,  # (B, S) {0,1}
+):
+    """Masked mean token cross-entropy with fp32 log-softmax.
+
+    Returns (loss, metrics) where metrics carries token counts and z-stats.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / total
+    metrics = {
+        "loss": loss,
+        "tokens": total,
+        "z_mean": (logz * mask).sum() / total,
+    }
+    return loss, metrics

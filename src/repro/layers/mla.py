@@ -1,0 +1,132 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and KV are low-rank compressed; only the compressed KV latent
+(``kv_lora_rank`` = 512) plus a small decoupled-RoPE key (64 dims, shared
+across heads) are cached.  Per-head dims: 128 "nope" + 64 rope for QK,
+128 for V.
+
+Two execution forms, numerically identical (tested):
+  * train/prefill — decompress K/V to per-head form, run the shared
+    flash-attention kernel with D_qk = nope+rope = 192, D_v = 128;
+  * decode        — *absorbed* form: W_uk is folded into the query and W_uv
+    into the output so attention runs directly in the 512-dim compressed
+    space; per-token cache traffic is 576 bytes·dtype instead of
+    2·128·128·2 — the reason MLA serves long contexts cheaply.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers.attention import flash_attention
+from repro.layers.common import rmsnorm
+from repro.layers.params import ParamSpec
+from repro.layers.rope import apply_rope
+
+__all__ = ["mla_schema", "mla_block", "init_mla_cache_spec"]
+
+NEG_INF = -1e30
+
+
+def mla_schema(cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, r_q), ("embed", None)),
+        "q_norm": ParamSpec((r_q,), ("norm",), init="ones"),
+        "wq_b": ParamSpec((r_q, h, dn + dr), (None, "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, r_kv + dr), ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((r_kv,), ("norm",), init="ones"),
+        "wk_b": ParamSpec((r_kv, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamSpec((r_kv, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def init_mla_cache_spec(cfg, batch: int, max_len: int):
+    """Cache = compressed latent (r_kv) ++ rope key (dr) per position."""
+    shape = (batch, max_len, cfg.kv_lora_rank + cfg.rope_head_dim)
+    axes = ("batch", "kv_seq", "kv_lora")
+    return shape, cfg.activation_dtype, axes
+
+
+def _compress(p, cfg, x, positions):
+    """-> (q_nope (B,S,H,dn), q_rope (B,S,H,dr), c_kv (B,S,r), k_rope (B,S,dr))."""
+    dn, dr = cfg.head_dim, cfg.rope_head_dim
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                 p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv = rmsnorm(ckv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(ckv[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_block(
+    p: dict,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,
+    cache: Optional[jax.Array] = None,  # (B, Smax, r_kv + dr)
+    cache_pos: Optional[jax.Array] = None,
+    mode: str = "train",
+):
+    B, S, d = x.shape
+    h, dn, dr, dv, r = (cfg.num_heads, cfg.head_dim, cfg.rope_head_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope, c_kv, k_rope = _compress(p, cfg, x, positions)
+    new_cache = None
+
+    if mode in ("train", "prefill"):
+        # Decompressed form: concat nope+rope into a 192-dim QK space.
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, dr))], -1
+        )
+        q = jnp.concatenate([q_nope, q_rope], -1)  # (B,S,h,dn+dr)
+        q = pshard(q[:, :, :, None, :], "batch", "seq", "heads", None, None)
+        k = pshard(k, "batch", "seq", "heads", "head_dim")
+        v = pshard(v, "batch", "seq", "heads", "head_dim")
+        out = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        out = out[:, :, :, 0, :]  # (B,S,h,dv)
+        if mode == "prefill":
+            packed = jnp.concatenate([c_kv, k_rope], -1).astype(cache.dtype)
+            new_cache = jax.lax.dynamic_update_slice(cache, packed, (0, 0, 0))
+            new_cache = pshard(new_cache, "batch", "kv_seq", "kv_lora")
+    elif mode == "decode":
+        # Absorbed form: attention entirely in the compressed space.
+        packed = jnp.concatenate([c_kv, k_rope], -1).astype(cache.dtype)
+        cache = jax.lax.dynamic_update_slice(cache, packed, (0, cache_pos, 0))
+        cache = pshard(cache, "batch", "kv_seq", "kv_lora")
+        new_cache = cache
+        ckv_cache, krope_cache = cache[..., :r], cache[..., r:]
+        # fold W_uk into q:   q_eff = q_nope @ W_uk  -> (B,1,h,r)
+        q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype))
+        scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
+        s = (
+            jnp.einsum("bshr,btr->bhst", q_eff.astype(jnp.float32),
+                       ckv_cache.astype(jnp.float32))
+            + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         krope_cache.astype(jnp.float32))
+        ) * scale
+        valid = jnp.arange(cache.shape[1]) <= cache_pos
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        attn = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", attn, ckv_cache.astype(jnp.float32))
+        # fold W_uv into the output
+        out = jnp.einsum("bshr,rhk->bshk", ctx.astype(x.dtype),
+                         p["wv_b"].astype(x.dtype))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return pshard(y, "batch", "act_seq", "embed"), new_cache

@@ -1,0 +1,38 @@
+"""Dense MLP blocks: gated SwiGLU (llama/qwen style) or plain 2-layer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers.common import act_fn
+from repro.layers.params import ParamSpec
+
+__all__ = ["mlp_schema", "mlp_block"]
+
+
+def mlp_schema(cfg, d_ff=None, gated=None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    gated = cfg.mlp_act == "silu" if gated is None else gated
+    s = {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        s["wg"] = ParamSpec((d, f), ("embed", "mlp"))
+    return s
+
+
+def mlp_block(p: dict, cfg, x: jax.Array) -> jax.Array:
+    act = act_fn(cfg.mlp_act)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = pshard(h, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    return pshard(y, "batch", "act_seq", "embed")

@@ -1,0 +1,108 @@
+"""Declarative parameter schemas.
+
+Models describe parameters once — shape, *logical* sharding axes, and
+initialiser — as a nested dict of :class:`ParamSpec`.  From that single
+schema we derive:
+
+* ``init_params``     — materialised arrays (CPU smoke tests, real training)
+* ``param_shapes``    — ``ShapeDtypeStruct`` pytree (the dry-run never
+                        allocates a single weight)
+* ``param_axes``      — logical-axis pytree consumed by
+                        ``distributed.partitioning`` to build NamedShardings
+
+This is what lets the same model code run on 1 CPU device and lower on a
+512-chip mesh without modification.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "param_shapes", "param_axes", "count_params", "stack_schema"]
+
+Schema = Dict[str, Any]  # nested dict of ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None  # overrides the default fan-in scale
+    dtype: Optional[str] = None  # overrides the model param dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+    def initializer(self, key: jax.Array, dtype) -> jax.Array:
+        dtype = jnp.dtype(self.dtype) if self.dtype else dtype
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "embed":
+            scale = self.scale if self.scale is not None else 1.0
+            return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+        if self.init == "normal":
+            # fan-in scaled: contract dims = all but the last, excluding
+            # stacking dims ('layers' for scan, 'expert' for MoE) which are
+            # batch-like, not contracting.
+            fan_in = 1
+            for dim, ax in zip(self.shape[:-1], self.axes[:-1]):
+                if ax not in ("layers", "expert"):
+                    fan_in *= dim
+            fan_in = fan_in or 1
+            scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+            return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema: Schema, key: jax.Array, dtype=jnp.float32):
+    """Materialise a schema into arrays with per-leaf folded keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=_is_leaf)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(spec.initializer(jax.random.fold_in(key, i), dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shapes(schema: Schema, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree — used by the multi-pod dry-run."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype) if s.dtype else dtype
+        ),
+        schema,
+        is_leaf=_is_leaf,
+    )
+
+
+def param_axes(schema: Schema):
+    """Logical-axis pytree (tuples), same structure as the params."""
+    return jax.tree_util.tree_map(lambda s: s.axes, schema, is_leaf=_is_leaf)
+
+
+def count_params(schema: Schema) -> int:
+    leaves = jax.tree_util.tree_leaves(schema, is_leaf=_is_leaf)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def stack_schema(schema: Schema, num: int, axis_name: str = "layers") -> Schema:
+    """Prepend a stacking dim to every leaf (for lax.scan over layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: dataclasses.replace(
+            s, shape=(num,) + s.shape, axes=(axis_name,) + s.axes
+        ),
+        schema,
+        is_leaf=_is_leaf,
+    )

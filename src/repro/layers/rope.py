@@ -1,0 +1,34 @@
+"""Rotary position embeddings (GPT-NeoX half-split convention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_rope"]
+
+
+def _angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (B, S) -> (B, S, dim/2) fp32 angles."""
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )  # (dim/2,)
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, D) or (B, S, D)
+    positions: jax.Array,  # (B, S)
+    theta: float = 1e6,
+) -> jax.Array:
+    """Rotate the last dim; fp32 trig, output in x.dtype."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[:, :, None, :]
+    d = x.shape[-1]
+    ang = _angles(positions, d, theta)[:, :, None, :]  # (B, S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    return out[:, :, 0, :] if squeeze else out

@@ -1,0 +1,265 @@
+"""Mamba2 block via SSD — state-space duality (arXiv:2405.21060).
+
+The chunked SSD algorithm is the sequence-axis instance of the paper's
+tilted-fusion insight (DESIGN.md §5): the sequence is cut into chunks
+("column tiles"); within a chunk the quadratic dual form runs entirely
+in fast memory; the only thing carried between chunks is the per-head
+state ``(P, N)`` — the overlap buffer of this dataflow.
+
+Layers:
+  * :func:`ssd_chunked`    — training/prefill: intra-chunk dual form +
+                             inter-chunk state scan; returns final state.
+  * :func:`ssd_reference`  — naive recurrence (the numerical oracle).
+  * :func:`ssd_decode_step`— O(1) cached decode.
+  * :func:`mamba_block`    — full block: projections, causal conv, gating.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers.common import rmsnorm, silu
+from repro.layers.params import ParamSpec
+
+__all__ = [
+    "ssd_chunked",
+    "ssd_reference",
+    "ssd_decode_step",
+    "mamba_schema",
+    "mamba_block",
+    "init_ssm_cache_spec",
+]
+
+
+# ----------------------------------------------------------------------
+# SSD core
+# ----------------------------------------------------------------------
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) with [t, s] = sum_{r in (s, t]} x_r (t >= s)."""
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)   (already softplus'd)
+    A: jax.Array,  # (H,)        (negative)
+    Bm: jax.Array,  # (B, S, H, N)  (groups pre-broadcast to heads)
+    Cm: jax.Array,  # (B, S, H, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:  # dt=0 padding steps are identity transitions (decay 1, input 0)
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = zp(x), zp(dt), zp(Bm), zp(Cm)
+        S_out, S = S, S + pad
+    else:
+        S_out = S
+    nc = S // Q
+    f32 = jnp.float32
+
+    def r(t):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    xb = (x * dt[..., None]).astype(f32)  # discretised input
+    xc, dtc = r(xb), r(dt.astype(f32))
+    Bc, Cc = r(Bm.astype(f32)), r(Cm.astype(f32))
+    dA = dtc * A.astype(f32)  # (B,nc,Q,H)
+    cs = jnp.cumsum(dA, axis=2)  # (B,nc,Q,H)
+
+    # ---- intra-chunk (dual / attention-like form) ----
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc) * L
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", scores, xc)
+
+    # ---- chunk-boundary states ----
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence (the "overlap buffer" carry) ----
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        h0 = h0.astype(f32)
+
+    def step(h, inp):
+        dec, st = inp  # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit the state at chunk START
+
+    hT, h_starts = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cc, h_starts) * jnp.exp(cs)[
+        ..., None
+    ].transpose(0, 1, 2, 3, 4)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_out]
+    return y.astype(x.dtype), hT
+
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Naive per-step recurrence — oracle for ssd_chunked/decode."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        dec = jnp.exp(dtt * A.astype(f32))
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, Bt.astype(f32), xt.astype(f32)
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ct.astype(f32), h)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step,
+        h0.astype(f32),
+        (
+            x.transpose(1, 0, 2, 3).astype(f32),
+            dt.transpose(1, 0, 2).astype(f32),
+            Bm.transpose(1, 0, 2, 3),
+            Cm.transpose(1, 0, 2, 3),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """One token: h (B,H,P,N), x (B,H,P), dt (B,H), Bm/Cm (B,H,N)."""
+    f32 = jnp.float32
+    dec = jnp.exp(dt.astype(f32) * A.astype(f32))
+    h = h * dec[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt.astype(f32), Bm.astype(f32), x.astype(f32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(f32), h)
+    return h, y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Full Mamba2 block
+# ----------------------------------------------------------------------
+def mamba_schema(cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    H, N, G, W = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_conv_width
+    conv_dim = din + 2 * G * N
+    return {
+        "wz": ParamSpec((d, din), ("embed", "mlp")),
+        "wx": ParamSpec((d, din), ("embed", "mlp")),
+        "wbc": ParamSpec((d, 2 * G * N), ("embed", None)),
+        "wdt": ParamSpec((d, H), ("embed", "ssm_heads")),
+        "conv_w": ParamSpec((W, conv_dim), (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((din,), ("norm",), init="ones"),
+        "wo": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def init_ssm_cache_spec(cfg, batch: int):
+    """Two caches per layer: conv window and SSM state."""
+    din = cfg.ssm_d_inner
+    G, N, W = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv_width
+    conv_dim = din + 2 * G * N
+    conv = ((batch, W - 1, conv_dim), ("batch", None, "mlp"))
+    ssm = (
+        (batch, cfg.ssm_heads, cfg.ssm_headdim, N),
+        ("batch", "ssm_heads", None, None),
+    )
+    return conv, ssm
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 window: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. xbc (B,S,C), w (W,C). Returns (y, new_window)."""
+    W = w.shape[0]
+    if window is None:
+        window = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    ext = jnp.concatenate([window, xbc], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        ext[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(W)
+    ) + b
+    new_window = ext[:, -(W - 1) :, :] if W > 1 else window
+    return y, new_window
+
+
+def mamba_block(
+    p: dict,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv, ssm)
+    mode: str = "train",
+):
+    """Returns (y (B,S,d), new_cache)."""
+    B, S, d = x.shape
+    din, H, P = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    z = jnp.einsum("bsd,df->bsf", x, p["wz"].astype(x.dtype))
+    xs = jnp.einsum("bsd,df->bsf", x, p["wx"].astype(x.dtype))
+    bc = jnp.einsum("bsd,df->bsf", x, p["wbc"].astype(x.dtype))
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    xbc = pshard(xbc, "batch", "seq", "mlp")
+
+    conv_win = cache[0] if cache is not None else None
+    if mode in ("train", "prefill"):
+        xbc_c, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype),
+                                       None if mode == "train" else conv_win)
+    else:  # decode: S == 1
+        xbc_c, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype), conv_win)
+    xbc_c = silu(xbc_c)
+    xs_c = xbc_c[..., :din].reshape(B, S, H, P)
+    Bm = xbc_c[..., din : din + G * N].reshape(B, S, G, N)
+    Cm = xbc_c[..., din + G * N :].reshape(B, S, G, N)
+    # broadcast groups to heads
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h0 = cache[1] if (cache is not None and mode != "train") else None
+    if mode in ("train", "prefill"):
+        # §Perf note: sharding the per-head dim P here was tried and REFUTED —
+        # it 7x'd collective bytes (per-layer resharding between the
+        # mlp-sharded conv layout and a P-sharded head layout). Heads stay
+        # the only SSD TP axis; when they don't divide, compute replicates.
+        xs_c = pshard(xs_c, "batch", "seq", "ssm_heads", None)
+        y, hT = ssd_chunked(xs_c, dt, A, Bm, Cm, cfg.ssm_chunk, h0)
+    else:
+        hT, y1 = ssd_decode_step(
+            h0, xs_c[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0]
+        )
+        y = y1[:, None]
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs_c
+    y = y.reshape(B, S, din)
+    y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(x.dtype))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = (new_conv, hT.astype(jnp.float32))
+    return pshard(out, "batch", "act_seq", "embed"), new_cache

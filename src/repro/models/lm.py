@@ -1,0 +1,248 @@
+"""Decoder-only LM covering the dense / MoE / MLA / VLM-prefix families.
+
+One config-driven assembly:
+  * attention: GQA (qwen2/3, arctic) or MLA (deepseek-v2)
+  * FFN: SwiGLU MLP, MoE (+shared experts), or MoE + parallel dense
+    residual (arctic); ``first_k_dense`` prologue layers (deepseek)
+  * optional multimodal prefix: precomputed frontend embeddings (internvl2
+    stub ViT) are concatenated ahead of the token embeddings
+  * layers run under ``lax.scan`` (homogeneous stack -> constant-size HLO,
+    constant compile time in depth) with a configurable remat policy
+
+The same forward serves train, prefill (fills the KV cache, returns
+last-position logits) and single-token decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers import attention as attn_lib
+from repro.layers import mla as mla_lib
+from repro.layers import moe as moe_lib
+from repro.layers.common import cross_entropy, embed_lookup, rmsnorm
+from repro.layers.mlp import mlp_block, mlp_schema
+from repro.layers.params import ParamSpec, stack_schema
+
+__all__ = ["schema", "cache_schema", "loss", "prefill", "decode_step", "forward"]
+
+
+# ----------------------------------------------------------------------
+# Schemas
+# ----------------------------------------------------------------------
+def _block_schema(cfg, moe: bool) -> dict:
+    d = cfg.d_model
+    s: Dict[str, Any] = {
+        "ln1": ParamSpec((d,), ("norm",), init="ones"),
+        "ln2": ParamSpec((d,), ("norm",), init="ones"),
+    }
+    s["attn"] = mla_lib.mla_schema(cfg) if cfg.attention == "mla" else attn_lib.gqa_schema(cfg)
+    if moe:
+        s["moe"] = moe_lib.moe_schema(cfg)
+        if cfg.dense_residual:
+            s["dense"] = mlp_schema(cfg)
+    else:
+        s["mlp"] = mlp_schema(cfg)
+    return s
+
+
+def _n_scan(cfg) -> int:
+    return cfg.num_layers - cfg.first_k_dense
+
+
+def schema(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "blocks": stack_schema(_block_schema(cfg, moe=cfg.is_moe), _n_scan(cfg)),
+        "final_norm": ParamSpec((d,), ("norm",), init="ones"),
+    }
+    for i in range(cfg.first_k_dense):
+        s[f"prologue_{i}"] = _block_schema(cfg, moe=False)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return s
+
+
+def cache_schema(cfg, batch: int, max_len: int) -> dict:
+    """ParamSpec tree (init=zeros) describing the decode cache."""
+    if cfg.attention == "mla":
+        shape, dtype, axes = mla_lib.init_mla_cache_spec(cfg, batch, max_len)
+        one = ParamSpec(shape, axes, init="zeros", dtype=str(dtype))
+        layer = {"ckv": one}
+    else:
+        shape, dtype, axes = attn_lib.init_kv_cache_spec(cfg, batch, max_len)
+        one = ParamSpec(shape, axes, init="zeros", dtype=str(dtype))
+        layer = {"k": one, "v": one}
+    s = {"layers": stack_schema(layer, _n_scan(cfg))}
+    for i in range(cfg.first_k_dense):
+        s[f"prologue_{i}"] = dict(layer)
+    return s
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+def _apply_block(p, cfg, x, positions, cache, cache_pos, mode, moe: bool):
+    """Pre-norm residual block. Returns (x, new_cache, metrics)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, new_cache = mla_lib.mla_block(
+            p["attn"], cfg, h, positions,
+            cache=None if cache is None else cache["ckv"],
+            cache_pos=cache_pos, mode=mode)
+        new_cache = None if new_cache is None else {"ckv": new_cache}
+    else:
+        a, kv = attn_lib.attention_block(
+            p["attn"], cfg, h, positions,
+            cache=None if cache is None else (cache["k"], cache["v"]),
+            cache_pos=cache_pos, mode=mode)
+        new_cache = None if kv is None else {"k": kv[0], "v": kv[1]}
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    metrics = {}
+    if moe:
+        f, metrics = moe_lib.moe_block(p["moe"], cfg, h)
+        if cfg.dense_residual:
+            f = f + mlp_block(p["dense"], cfg, h)
+    else:
+        f = mlp_block(p["mlp"], cfg, h)
+    return x + f, new_cache, metrics
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+def forward(
+    params,
+    cfg,
+    tokens: jax.Array,  # (B, S)
+    *,
+    frontend: Optional[jax.Array] = None,  # (B, F, d) precomputed embeds
+    cache=None,
+    cache_pos=None,
+    mode: str = "train",
+    last_logit_only: bool = False,
+):
+    """Returns (logits (B, S_total, V), new_cache, metrics)."""
+    act = cfg.activation_dtype
+    x = embed_lookup(params["embed"], tokens, act)
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(act), x], axis=1)
+    B, S, _ = x.shape
+    x = pshard(x, "batch", "act_seq", "embed")
+    if mode == "decode":
+        positions = jnp.full((B, 1), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    new_cache: Dict[str, Any] = {}
+    all_metrics = []
+    for i in range(cfg.first_k_dense):
+        c = None if cache is None else cache[f"prologue_{i}"]
+        x, nc, m = _apply_block(
+            params[f"prologue_{i}"], cfg, x, positions, c, cache_pos, mode, moe=False
+        )
+        if nc is not None:
+            new_cache[f"prologue_{i}"] = nc
+        all_metrics.append(m)
+
+    block = functools.partial(_apply_block, cfg=cfg, mode=mode, moe=cfg.is_moe)
+
+    def body(carry, xs):
+        lp, lc = xs
+        y, nc, m = _remat(
+            lambda c, p, cch: block(p, x=c, positions=positions, cache=cch,
+                                    cache_pos=cache_pos),
+            cfg,
+        )(carry, lp, lc)
+        return y, (nc, m)
+
+    layer_caches = None if cache is None else cache["layers"]
+    if layer_caches is None:
+        # supply a dummy xs tree so scan has uniform structure
+        xs = (params["blocks"], None)
+        def body_nc(carry, lp):
+            y, nc, m = _remat(
+                lambda c, p: block(p, x=c, positions=positions, cache=None,
+                                   cache_pos=cache_pos),
+                cfg,
+            )(carry, lp)
+            return y, m
+        x, ms = jax.lax.scan(body_nc, x, params["blocks"])
+        scan_metrics = ms
+    else:
+        x, (ncs, ms) = jax.lax.scan(body, x, (params["blocks"], layer_caches))
+        new_cache["layers"] = ncs
+        scan_metrics = ms
+
+    if last_logit_only:
+        # §Perf (prefill cells): the unembedding matmul + its vocab-sharded
+        # collectives over all S positions is pure waste when only the last
+        # position's logits are consumed — slice the hidden state first.
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = pshard(logits, "batch", "seq", "vocab")
+
+    metrics = {}
+    if cfg.is_moe and scan_metrics:
+        metrics = {k: jnp.mean(v) for k, v in scan_metrics.items()}
+    return logits, (new_cache if new_cache else None), metrics
+
+
+# ----------------------------------------------------------------------
+# Unified API
+# ----------------------------------------------------------------------
+def loss(params, cfg, batch):
+    logits, _, metrics = forward(
+        params, cfg, batch["tokens"], frontend=batch.get("frontend"), mode="train"
+    )
+    if batch.get("frontend") is not None:
+        logits = logits[:, batch["frontend"].shape[1] :]
+    l, ce_metrics = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    metrics.update(ce_metrics)
+    if cfg.is_moe:
+        l = (
+            l
+            + cfg.router_aux_weight * metrics["moe_aux_loss"]
+            + cfg.router_z_weight * metrics["moe_z_loss"]
+        )
+    metrics["total_loss"] = l
+    return l, metrics
+
+
+def prefill(params, cfg, batch, cache):
+    """Fill the cache; return (last-position logits (B, V), cache)."""
+    logits, new_cache, _ = forward(
+        params, cfg, batch["tokens"], frontend=batch.get("frontend"),
+        cache=cache, cache_pos=jnp.int32(0), mode="prefill",
+        last_logit_only=True,
+    )
+    return logits[:, -1, :], new_cache
+
+
+def decode_step(params, cfg, tokens, cache, pos):
+    """One decode step at position ``pos``; returns (logits (B, V), cache)."""
+    logits, new_cache, _ = forward(
+        params, cfg, tokens, cache=cache, cache_pos=pos, mode="decode"
+    )
+    return logits[:, -1, :], new_cache

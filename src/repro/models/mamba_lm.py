@@ -1,0 +1,110 @@
+"""Mamba2 language model (attention-free SSM; mamba2-130m).
+
+Embedding -> scanned (norm + Mamba2 block) residual layers -> norm ->
+tied logits.  Decode is O(1) per token: the cache is the conv window plus
+the (H, P, N) SSM state per layer — this is why the ``long_500k`` shape
+runs here while pure-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers.common import cross_entropy, embed_lookup, rmsnorm
+from repro.layers.params import ParamSpec, stack_schema
+from repro.layers.ssd import init_ssm_cache_spec, mamba_block, mamba_schema
+
+__all__ = ["schema", "cache_schema", "loss", "prefill", "decode_step", "forward"]
+
+
+def _block_schema(cfg) -> dict:
+    return {
+        "ln": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+        "mamba": mamba_schema(cfg),
+    }
+
+
+def schema(cfg) -> dict:
+    s: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="embed", scale=0.02),
+        "blocks": stack_schema(_block_schema(cfg), cfg.num_layers),
+        "final_norm": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def cache_schema(cfg, batch: int, max_len: int) -> dict:
+    (conv_shape, conv_axes), (ssm_shape, ssm_axes) = init_ssm_cache_spec(cfg, batch)
+    layer = {
+        "conv": ParamSpec(conv_shape, conv_axes, init="zeros", dtype=cfg.dtype),
+        "ssm": ParamSpec(ssm_shape, ssm_axes, init="zeros", dtype="float32"),
+    }
+    return {"layers": stack_schema(layer, cfg.num_layers)}
+
+
+def forward(params, cfg, tokens, *, cache=None, cache_pos=None, mode="train",
+            last_logit_only=False):
+    act = cfg.activation_dtype
+    x = embed_lookup(params["embed"], tokens, act)
+    x = pshard(x, "batch", "act_seq", "embed")
+
+    def body(carry, xs):
+        lp, lc = xs
+        h = rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        c = None if lc is None else (lc["conv"], lc["ssm"])
+        y, nc = mamba_block(lp["mamba"], cfg, h, cache=c, mode=mode)
+        out_cache = None if nc is None else {"conv": nc[0], "ssm": nc[1]}
+        return carry + y, out_cache
+
+    if cache is None:
+        def body_nc(carry, lp):
+            h = rmsnorm(carry, lp["ln"], cfg.norm_eps)
+            y, _ = mamba_block(lp["mamba"], cfg, h, cache=None, mode=mode)
+            return carry + y, None
+        x, _ = jax.lax.scan(body_nc, x, params["blocks"])
+        new_cache = None
+    else:
+        x, ncs = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        new_cache = {"layers": ncs}
+
+    if last_logit_only:
+        # §Perf (prefill cells): the unembedding matmul + its vocab-sharded
+        # collectives over all S positions is pure waste when only the last
+        # position's logits are consumed — slice the hidden state first.
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return pshard(logits, "batch", "seq", "vocab"), new_cache, {}
+
+
+def loss(params, cfg, batch):
+    logits, _, metrics = forward(params, cfg, batch["tokens"], mode="train")
+    l, ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    metrics.update(ce)
+    metrics["total_loss"] = l
+    return l, metrics
+
+
+def prefill(params, cfg, batch, cache):
+    logits, new_cache, _ = forward(
+        params, cfg, batch["tokens"], cache=cache, cache_pos=jnp.int32(0),
+        mode="prefill", last_logit_only=True,
+    )
+    return logits[:, -1, :], new_cache
+
+
+def decode_step(params, cfg, tokens, cache, pos):
+    logits, new_cache, _ = forward(
+        params, cfg, tokens, cache=cache, cache_pos=pos, mode="decode"
+    )
+    return logits[:, -1, :], new_cache

@@ -1,0 +1,35 @@
+"""Model registry: family -> unified model API.
+
+Every family module exposes:
+  schema(cfg)                          parameter ParamSpec tree
+  cache_schema(cfg, batch, max_len)    decode-cache ParamSpec tree
+  loss(params, cfg, batch)             -> (scalar loss, metrics)
+  prefill(params, cfg, batch, cache)   -> (last logits (B,V), cache)
+  decode_step(params, cfg, tok, cache, pos) -> (logits (B,V), cache)
+"""
+
+from __future__ import annotations
+
+import types
+
+from repro.models import encdec, lm, mamba_lm, zamba
+
+__all__ = ["get_model"]
+
+_FAMILY = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "ssm": mamba_lm,
+    "hybrid": zamba,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg) -> types.ModuleType:
+    try:
+        return _FAMILY[cfg.family]
+    except KeyError:
+        raise ValueError(
+            f"unknown family {cfg.family!r}; expected one of {sorted(_FAMILY)}"
+        ) from None

@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid: Mamba2 backbone + shared attention blocks.
+
+``num_layers`` Mamba2 residual blocks are interleaved with applications of
+``num_shared_blocks`` weight-shared transformer blocks (attention + MLP):
+after every ``shared_attn_period`` Mamba layers, shared block
+``(app_index % num_shared_blocks)`` runs.  Shared-block weights are stored
+once — the parameter saving that lets Zamba2 punch above its size — while
+each application keeps its own KV cache.
+
+Simplifications vs the released checkpoints (recorded in DESIGN.md):
+per-application LoRA deltas on the shared blocks and the concatenated
+residual input are omitted; block structure, GQA geometry, SSM sizes and
+the sharing schedule follow the assigned config.
+
+Fusion note (DESIGN.md §5): the Mamba segments between attention points
+stream with O(1) carried state — tilted-fusion-style; the shared full
+attention is the global barrier that bounds the fusable span.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import pshard
+from repro.layers import attention as attn_lib
+from repro.layers.common import cross_entropy, embed_lookup, rmsnorm
+from repro.layers.mlp import mlp_block, mlp_schema
+from repro.layers.params import ParamSpec, stack_schema
+from repro.layers.ssd import init_ssm_cache_spec, mamba_block, mamba_schema
+
+__all__ = ["schema", "cache_schema", "loss", "prefill", "decode_step", "forward"]
+
+
+def _num_apps(cfg) -> int:
+    return cfg.num_layers // cfg.shared_attn_period
+
+
+def _shared_block_schema(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("norm",), init="ones"),
+        "attn": attn_lib.gqa_schema(cfg),
+        "ln2": ParamSpec((d,), ("norm",), init="ones"),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def schema(cfg) -> dict:
+    s: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="embed", scale=0.02),
+        "blocks": stack_schema(
+            {"ln": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+             "mamba": mamba_schema(cfg)},
+            cfg.num_layers,
+        ),
+        "shared": stack_schema(_shared_block_schema(cfg), cfg.num_shared_blocks,
+                               axis_name="layers"),
+        "final_norm": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def cache_schema(cfg, batch: int, max_len: int) -> dict:
+    (conv_shape, conv_axes), (ssm_shape, ssm_axes) = init_ssm_cache_spec(cfg, batch)
+    mamba_layer = {
+        "conv": ParamSpec(conv_shape, conv_axes, init="zeros", dtype=cfg.dtype),
+        "ssm": ParamSpec(ssm_shape, ssm_axes, init="zeros", dtype="float32"),
+    }
+    kv_shape, kv_dtype, kv_axes = attn_lib.init_kv_cache_spec(cfg, batch, max_len)
+    kv = ParamSpec(kv_shape, kv_axes, init="zeros", dtype=str(kv_dtype))
+    # one KV cache per shared-block APPLICATION (not per shared block)
+    return {
+        "layers": stack_schema(mamba_layer, cfg.num_layers),
+        "shared_kv": stack_schema({"k": kv, "v": kv}, _num_apps(cfg),
+                                  axis_name="layers"),
+    }
+
+
+def _take(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _shared_apply(p, cfg, x, positions, kv, cache_pos, mode):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, new_kv = attn_lib.attention_block(
+        p["attn"], cfg, h, positions,
+        cache=None if kv is None else (kv["k"], kv["v"]),
+        cache_pos=cache_pos, mode=mode)
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(p["mlp"], cfg, h)
+    return x, (None if new_kv is None else {"k": new_kv[0], "v": new_kv[1]})
+
+
+def forward(params, cfg, tokens, *, cache=None, cache_pos=None, mode="train",
+            last_logit_only=False):
+    act = cfg.activation_dtype
+    period, n_apps = cfg.shared_attn_period, _num_apps(cfg)
+    x = embed_lookup(params["embed"], tokens, act)
+    x = pshard(x, "batch", "act_seq", "embed")
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = jnp.full((B, 1), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def seg_body(carry, xs):
+        if cache is None:
+            lp = xs
+            lc = None
+        else:
+            lp, lc = xs
+        h = rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        c = None if lc is None else (lc["conv"], lc["ssm"])
+        y, nc = mamba_block(lp["mamba"], cfg, h, cache=c, mode=mode)
+        out = None if nc is None else {"conv": nc[0], "ssm": nc[1]}
+        return carry + y, (out if cache is not None else None)
+
+    new_mamba, new_kv = [], []
+    for app in range(n_apps):
+        sl = slice(app * period, (app + 1) * period)
+        seg_params = _take(params["blocks"], sl)
+        if cache is None:
+            x, _ = jax.lax.scan(seg_body, x, seg_params)
+        else:
+            seg_cache = _take(cache["layers"], sl)
+            x, ncs = jax.lax.scan(seg_body, x, (seg_params, seg_cache))
+            new_mamba.append(ncs)
+        shared_p = _take(params["shared"], app % cfg.num_shared_blocks)
+        kv = None if cache is None else _take(cache["shared_kv"], app)
+        x, nkv = _shared_apply(shared_p, cfg, x, positions, kv, cache_pos, mode)
+        if nkv is not None:
+            new_kv.append(nkv)
+
+    # trailing mamba layers not followed by a shared application
+    rem = cfg.num_layers - n_apps * period
+    if rem:
+        sl = slice(n_apps * period, cfg.num_layers)
+        seg_params = _take(params["blocks"], sl)
+        if cache is None:
+            x, _ = jax.lax.scan(seg_body, x, seg_params)
+        else:
+            seg_cache = _take(cache["layers"], sl)
+            x, ncs = jax.lax.scan(seg_body, x, (seg_params, seg_cache))
+            new_mamba.append(ncs)
+
+    new_cache = None
+    if cache is not None:
+        stack = lambda trees: jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *trees
+        )
+        new_cache = {
+            "layers": stack(new_mamba),
+            "shared_kv": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_kv
+            ),
+        }
+
+    if last_logit_only:
+        # §Perf (prefill cells): the unembedding matmul + its vocab-sharded
+        # collectives over all S positions is pure waste when only the last
+        # position's logits are consumed — slice the hidden state first.
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return pshard(logits, "batch", "seq", "vocab"), new_cache, {}
+
+
+def loss(params, cfg, batch):
+    logits, _, metrics = forward(params, cfg, batch["tokens"], mode="train")
+    l, ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    metrics.update(ce)
+    metrics["total_loss"] = l
+    return l, metrics
+
+
+def prefill(params, cfg, batch, cache):
+    logits, new_cache, _ = forward(
+        params, cfg, batch["tokens"], cache=cache, cache_pos=jnp.int32(0),
+        mode="prefill", last_logit_only=True,
+    )
+    return logits[:, -1, :], new_cache
+
+
+def decode_step(params, cfg, tokens, cache, pos):
+    logits, new_cache, _ = forward(
+        params, cfg, tokens, cache=cache, cache_pos=pos, mode="decode"
+    )
+    return logits[:, -1, :], new_cache

@@ -1,0 +1,77 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Functional, pytree-based.  Moment dtype is configurable: the ≥200B configs
+run bf16 moments so that params + both moments fit 16 GB/chip under FSDP
+(DESIGN.md §6); parameter updates are computed in fp32 regardless.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_opt_state", "adamw_update", "lr_schedule", "global_norm"]
+
+
+def init_opt_state(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def lr_schedule(step, tcfg) -> jax.Array:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - tcfg.warmup_steps)
+        / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return tcfg.learning_rate * warm * cos
+
+
+def adamw_update(
+    grads, opt_state, params, tcfg
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, tcfg)
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (update + wd * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

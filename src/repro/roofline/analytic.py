@@ -1,0 +1,135 @@
+"""Analytic per-device HBM traffic (the TPU-side memory roofline term).
+
+The CPU-backend HLO materialises fp32 up-casts and layout copies that the
+TPU compiler fuses away, so byte counts parsed from the compiled CPU HLO
+over-state HBM traffic by 1-2 orders of magnitude.  This module computes
+the standard napkin model instead — weights, optimizer state, KV/SSM cache
+and residual-stream carries actually crossing HBM per step — with every
+tensor divided by its real shard count (same shape-aware rules the dry-run
+uses).  EXPERIMENTS.md reports both numbers; the bottleneck call uses this
+one.
+
+Traffic model (per device, per step):
+
+  train   : microbatches * (2 reads + grad write) of params
+            + 4x optimizer state (m,v read+write) + 1x param write
+            + 2x saved layer carries (write fwd, read bwd) * microbatches
+            + logits io (3x) * microbatches + token io
+  prefill : 1x params read + 1x cache write + 2x residual stream
+  decode  : 1x params read + 1x cache read (the KV/state scan) + epsilon
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.distributed import partitioning as pt
+from repro.layers.params import ParamSpec, param_axes, param_shapes
+from repro.models.registry import get_model
+
+__all__ = ["sharded_bytes", "analytic_hbm_bytes"]
+
+
+class _StubMesh:
+    """Duck-typed mesh for shape_aware_spec without touching jax devices."""
+
+    def __init__(self, sizes: Dict[str, int]):
+        import numpy as np
+
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()), dtype=object)
+
+
+def _mesh_sizes(mesh_name: str) -> Dict[str, int]:
+    return ({"pod": 2, "data": 16, "model": 16} if mesh_name == "multi_pod"
+            else {"data": 16, "model": 16})
+
+
+def sharded_bytes(schema, rules, mesh_sizes: Dict[str, int],
+                  default_dtype=jnp.float32) -> int:
+    """Per-device bytes of a ParamSpec tree under the given rules."""
+    import jax
+
+    mesh = _StubMesh(mesh_sizes)
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec)
+    ):
+        spec = pt.shape_aware_spec(leaf.axes, leaf.shape, mesh, rules)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry,) if isinstance(entry, str) else entry:
+                shards *= mesh_sizes[ax]
+        n = math.prod(leaf.shape)
+        dt = jnp.dtype(leaf.dtype) if leaf.dtype else jnp.dtype(default_dtype)
+        total += n * dt.itemsize // shards
+    return total
+
+
+def analytic_hbm_bytes(rec: Dict, cfg, rules) -> float:
+    """Per-device HBM bytes for the recorded cell's step."""
+    sizes = _mesh_sizes(rec["mesh"])
+    model = get_model(cfg)
+    schema = model.schema(cfg)
+    p_bytes = sharded_bytes(schema, rules, sizes, cfg.weight_dtype)
+    devices = math.prod(sizes.values())
+    B, S = rec["global_batch"], rec["seq_len"]
+    d = cfg.d_model
+    act = jnp.dtype(cfg.dtype).itemsize
+    dp = max(devices // sizes["model"], 1)
+    sp = sizes["model"]  # act_seq sequence-parallel factor
+
+    if rec["kind"] == "train":
+        mb = 4 if cfg.fsdp else 1
+        mom_bytes = 2 * p_bytes  # m and v, same sharding (dtype ~ param)
+        carries = (cfg.num_layers * (B // dp) * S // sp * d * act) // max(mb, 1)
+        logits = (B // dp) * S * (cfg.vocab_size // sizes["model"]) * act
+        return (
+            mb * 2 * p_bytes  # fwd + remat-fwd reads (bwd reuses)
+            + p_bytes  # grad write
+            + p_bytes + 2 * mom_bytes  # optimizer read+write
+            + mb * 2 * carries
+            + 3 * logits
+        )
+    if rec["kind"] == "prefill":
+        cache = _cache_bytes(cfg, rec, sizes)
+        stream = 2 * cfg.num_layers * (B // dp) * (S // sp) * d * act
+        return p_bytes + cache + stream
+    # decode
+    cache = _cache_bytes(cfg, rec, sizes)
+    return p_bytes + cache
+
+
+def _cache_bytes(cfg, rec, sizes) -> int:
+    from repro.distributed.steps import cache_axes_and_shapes
+
+    axes_tree, shapes_tree = cache_axes_and_shapes(
+        cfg, rec["global_batch"], rec["seq_len"]
+    )
+    import jax
+
+    mesh = _StubMesh(sizes)
+    # rules for cache include kv_seq sharding on long decode
+    rules = dict(pt.BASE_RULES)
+    if rec["shape"] == "long_500k":
+        rules = pt.long_context_rules(rules)
+    total = 0
+    for axes, sds in zip(
+        jax.tree_util.tree_leaves(axes_tree,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+        jax.tree_util.tree_leaves(shapes_tree),
+    ):
+        spec = pt.shape_aware_spec(axes, sds.shape, mesh, rules)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry,) if isinstance(entry, str) else entry:
+                shards *= sizes[ax]
+        total += math.prod(sds.shape) * sds.dtype.itemsize // shards
+    return total

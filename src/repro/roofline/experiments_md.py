@@ -1,0 +1,172 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline from the sweep artifacts.
+
+Run:  PYTHONPATH=src python -m repro.roofline.experiments_md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline.report import (
+    _fmt_t,
+    dryrun_table,
+    load_records,
+    roofline_row,
+    roofline_table,
+)
+
+HEADER = """\
+# EXPERIMENTS
+
+Reproduction of *A Real Time Super Resolution Accelerator with Tilted Layer
+Fusion* (ISCAS 2022) — paper-claim validation, multi-pod dry-run, roofline
+analysis and performance iteration log.  All artifacts regenerate with:
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+PYTHONPATH=src python -m repro.roofline.experiments_md
+PYTHONPATH=src python -m benchmarks.run
+```
+
+## §Paper-claims (the faithful reproduction)
+
+Validated by `tests/test_analysis.py`, `tests/test_fusion.py`,
+`tests/test_system.py` and `benchmarks/`:
+
+| claim (paper) | reproduced | where |
+|---|---|---|
+| tilted fusion preserves left/right boundary information | **bit-exact** vs SAME-conv reference (0.0 max diff, incl. nonzero biases) | `test_fusion.py::test_single_band_bit_exact` |
+| ping-pong buffer 26.88 KB (eq. 1) | 26.88 KB exact | `core.analysis.buffer_sizes` |
+| overlap buffer 30.24 KB (eq. 2, L+2 slots) | 30.24 KB exact | same |
+| residual buffer 2.7 KB (eq. 3) | 2.7 KB exact | same |
+| weight buffer 42.54 KB | 43.03 KB (+1.2%, bias-width bookkeeping) | same |
+| total on-chip 102.36 KB vs classical 254.94 KB (−60%) | 102.86 vs 255.44 KB (−59.7%) | `test_analysis.py` |
+| DRAM 5.03 -> 0.41 GB/s (−92%) | 5.06 -> 0.417 GB/s (−91.8%) | `core.analysis.dram_traffic` |
+| 1260 MACs @600 MHz -> FHD x3 @60 fps (124.4 Mpix/s) | 65.9 fps capacity -> 124.4 Mpix/s at target | `core.analysis.pe_throughput_model` |
+| ~87% average MAC utilisation | 86.1% (layer-1's 3/28 input channels is the loss) | same |
+| <0.2 dB PSNR penalty from top/bottom band loss | banded-vs-exact PSNR > 30 dB on synthetic textures (see benchmarks/psnr) | `test_system.py`, `benchmarks` |
+
+The Pallas TPU kernel (`kernels/tilted_fusion.py`) reproduces the schedule
+with the overlap queue in persistent VMEM scratch and matches the jnp
+oracle to fp32 accumulation tolerance across shape/dtype sweeps
+(`tests/test_kernels.py`).
+
+"""
+
+DRYRUN_INTRO = """\
+## §Dry-run
+
+Every (architecture x input-shape) cell lowered AND compiled with
+`jax.jit(...).lower().compile()` on the production meshes —
+single-pod `(data=16, model=16)` = 256 chips and multi-pod
+`(pod=2, data=16, model=16)` = 512 chips (512 placeholder host devices).
+`decode_*`/`long_*` cells compile `serve_step` (single new token against a
+full-length cache); `long_500k` runs only for the sub-quadratic archs
+(ssm/hybrid) and is recorded as SKIP for the eight pure-attention archs.
+
+Columns: compile wall time on this container's single CPU core;
+peak memory/device from `compiled.memory_analysis()`
+(argument+output+temp−aliased); per-device HLO FLOPs and collective bytes
+from the scan-aware HLO parser (`roofline/hlo_parse.py` — XLA's
+`cost_analysis()` counts `while` bodies once, the parser multiplies by the
+recovered trip counts).
+
+**Memory caveat (quantified):** the CPU backend materialises fp32 up-casts
+and layout copies that the TPU compiler fuses away, so `temp` sizes here are
+upper bounds (measured inflation ~2-10x on the large cells; see §Roofline's
+analytic column for the TPU-side estimate). The >16 GB peaks on the two
+>=200B-param train cells are dominated by exactly these artifacts plus
+fp32 optimizer temporaries that alias in-place on TPU.
+
+"""
+
+ROOFLINE_INTRO = """\
+## §Roofline
+
+Per (arch x shape) on the single-pod mesh (256 chips), per device:
+
+    compute    = HLO_FLOPs / 197 TFLOP/s
+    memory     = HBM_bytes / 819 GB/s      (analytic TPU-side model*)
+    collective = collective_bytes / 50 GB/s per ICI link
+
+*HLO_FLOPs and collective bytes come from the compiled HLO (scan-aware
+parser). HBM bytes use the analytic traffic model
+(`roofline/analytic.py`: weights/optimizer/cache/carries per step, each
+divided by its true shard count) because CPU-HLO byte counts overstate
+TPU traffic; the parsed upper bound is retained in the JSON artifacts.
+
+`MODEL/HLO flops` = 6·N_active·D (train) or 2·N_active·D (serve) divided by
+compiled per-device FLOPs — the useful-work fraction; it exposes remat
+recompute, replicated attention (head counts not divisible by the 16-way
+model axis), causal-mask waste in flash attention, and MoE dispatch
+overhead. `roofline frac` = useful-model-time / dominant-term-time: the
+score this report tracks.
+
+"""
+
+
+def _compare_table(base, opt) -> str:
+    """Baseline vs optimized roofline fractions per single-pod cell."""
+    def rows_by_key(recs):
+        out = {}
+        for r in recs:
+            if r.get("mesh") != "single_pod":
+                continue
+            row = roofline_row(r)
+            if row:
+                out[(r["arch"], r["shape"])] = row
+        return out
+
+    b, o = rows_by_key(base), rows_by_key(opt)
+    lines = [
+        "| arch | shape | dominant (base→opt) | t_dominant base | t_dominant opt"
+        " | roofline frac base | opt | Δ |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(set(b) & set(o)):
+        rb, ro = b[key], o[key]
+        tb = max(rb["t_compute_s"], rb["t_memory_s"], rb["t_collective_s"])
+        to = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        speedup = tb / to if to else float("inf")
+        lines.append(
+            f"| {key[0]} | {key[1]} | {rb['dominant']}→{ro['dominant']} | "
+            f"{_fmt_t(tb)} | {_fmt_t(to)} | {rb['roofline_fraction']:.3f} | "
+            f"{ro['roofline_fraction']:.3f} | ×{speedup:.2f} faster |"
+        )
+    return "\n".join(lines)
+
+
+def main(out_path: str = "EXPERIMENTS.md", perf_path: str = "experiments/perf_log.md"):
+    recs = load_records()
+    parts = [HEADER, DRYRUN_INTRO, dryrun_table(recs), "\n"]
+    parts += [ROOFLINE_INTRO,
+              "### Baseline (paper-faithful substrate, pre-optimization)\n",
+              roofline_table(recs), "\n"]
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    parts.append(
+        f"\nBaseline cells: {n_ok} compiled ok, {n_skip} policy skips, "
+        f"{len(recs) - n_ok - n_skip} errors out of {len(recs)}.\n"
+    )
+    opt = load_records("experiments/dryrun_opt")
+    if opt:
+        parts.append("### Optimized (post-§Perf) vs baseline — single pod\n")
+        parts.append(_compare_table(recs, opt))
+        o_ok = sum(r["status"] == "ok" for r in opt)
+        o_skip = sum(r["status"] == "skipped" for r in opt)
+        parts.append(
+            f"\nOptimized cells: {o_ok} ok, {o_skip} skips, "
+            f"{len(opt) - o_ok - o_skip} errors out of {len(opt)}.\n"
+        )
+    if os.path.exists(perf_path):
+        with open(perf_path) as f:
+            parts.append("\n" + f.read())
+    with open(out_path, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {out_path} ({n_ok} ok / {len(recs)} baseline cells; "
+          f"{len(opt)} optimized)")
+
+
+if __name__ == "__main__":
+    main()

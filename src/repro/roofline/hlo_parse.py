@@ -1,0 +1,358 @@
+"""Roofline terms from compiled (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+scanned over layers under-reports FLOPs/bytes by ~num_layers.  This parser
+walks the HLO call graph (entry -> fusions/calls/whiles), multiplies loop
+bodies by their trip counts (recovered from the loop-condition constant),
+and accumulates three per-device quantities:
+
+  * flops            — 2*M*N*K for every dot, window*Ci*out for convs
+  * hbm_bytes        — operands+outputs of top-level ops only (internal ops
+                       of a fusion stay in registers/VMEM, they never touch
+                       HBM — fusions are charged at their boundary)
+  * collective_bytes — operand sizes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute
+                       (also split per collective type)
+
+Validated against ``cost_analysis`` on unrolled toy programs in
+``tests/test_roofline.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(\S+?)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?([%\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?([^,}\s]+(?:,\s*[^,}\s]+)*)\}?")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+_KERNEL_LABEL_RE = re.compile(r"dim_labels=[^_]+_([0-9a-z]+)->")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _arrays(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _arrays(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # args + attributes (rest of line)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k,
+            self.hbm_bytes * k,
+            self.collective_bytes * k,
+            {t: b * k for t, b in self.collective_by_type.items()},
+            int(self.collective_count * k),
+            list(self.while_trip_counts),
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.collective_bytes += other.collective_bytes
+        for t, b in other.collective_by_type.items():
+            self.collective_by_type[t] = self.collective_by_type.get(t, 0.0) + b
+        self.collective_count += other.collective_count
+        self.while_trip_counts.extend(other.while_trip_counts)
+
+
+def _split_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    current: Optional[str] = None
+    entry_name: Optional[str] = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "=" not in line.split("(")[0]:
+            current = m.group(1).lstrip("%")
+            comps[current] = []
+            if line.startswith("ENTRY"):
+                entry_name = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            comps[current].append(
+                _Op(om.group(1).lstrip("%"), om.group(2), om.group(3), om.group(4))
+            )
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _first_operand_shapes(op: _Op, table: Dict[str, str], n: int = 2):
+    """Shapes of the first n operands, resolving names via the symbol table."""
+    # take the argument region up to the matching close paren (approximate:
+    # split at '), ' attribute boundary)
+    args = op.rest
+    depth, end = 0, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    arg_str = args[:end]
+    shapes = []
+    for tok in arg_str.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        arrs = _arrays(tok)
+        if arrs:  # operand written with inline type
+            shapes.append(arrs[0])
+        else:
+            name = tok.lstrip("%")
+            ts = table.get(name)
+            if ts is not None:
+                arrs = _arrays(ts)
+                shapes.append(arrs[0] if arrs else None)
+            else:
+                shapes.append(None)
+        if len(shapes) >= n:
+            break
+    return shapes
+
+
+def _dot_flops(op: _Op, table: Dict[str, str]) -> float:
+    out_arrays = _arrays(op.type_str)
+    if not out_arrays:
+        return 0.0
+    out_elems = _prod(out_arrays[0][1])
+    m = _DIMS_RE.search(op.rest)
+    lhs = _first_operand_shapes(op, table, 1)
+    contract = 1
+    if m and lhs and lhs[0] is not None:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        shape = lhs[0][1]
+        for d in dims:
+            if d < len(shape):
+                contract *= shape[d]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: _Op, table: Dict[str, str]) -> float:
+    out_arrays = _arrays(op.type_str)
+    if not out_arrays:
+        return 0.0
+    out_elems = _prod(out_arrays[0][1])
+    wm = _WINDOW_RE.search(op.rest)
+    window = 1
+    if wm:
+        for d in wm.group(1).split("x"):
+            window *= int(d)
+    # input-feature size from the kernel operand + dim_labels (e.g. 01io)
+    ci = 1
+    km = _KERNEL_LABEL_RE.search(op.rest)
+    ops = _first_operand_shapes(op, table, 2)
+    if km and len(ops) > 1 and ops[1] is not None:
+        labels = km.group(1)
+        if "i" in labels:
+            idx = labels.index("i")
+            kshape = ops[1][1]
+            if idx < len(kshape):
+                ci = kshape[idx]
+    return 2.0 * out_elems * window * ci
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # containers: their bodies are charged, the op line is plumbing
+    "while", "conditional", "call",
+}
+
+
+def _operand_names(op: _Op) -> List[str]:
+    args = op.rest
+    depth, end = 0, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    return [t.strip() for t in args[:end].split(",") if t.strip()]
+
+
+def _sliced_param_bytes(comps, called: str) -> Dict[int, float]:
+    """Fusion params consumed ONLY via dynamic-slice: charge the slice size.
+
+    This is what makes scanned weight stacks cost one layer's bytes per
+    iteration instead of the whole (L, ...) stack.
+    Returns {operand_index: effective_bytes}.
+    """
+    ops = comps.get(called, [])
+    params: Dict[str, int] = {}
+    for o in ops:
+        if o.opcode == "parameter":
+            m = re.match(r"(\d+)", o.rest)
+            if m:
+                params[o.name] = int(m.group(1))
+    out: Dict[int, float] = {}
+    for pname, pidx in params.items():
+        consumers = [o for o in ops if o.opcode != "parameter"
+                     and re.search(rf"%{re.escape(pname)}\b", o.rest)]
+        if consumers and all(o.opcode == "dynamic-slice" for o in consumers):
+            out[pidx] = float(sum(_nbytes(o.type_str) for o in consumers))
+    return out
+
+
+def _op_hbm_bytes(op: _Op, table: Dict[str, str], comps=None) -> float:
+    if op.opcode in _SKIP_BYTES:
+        return 0.0
+    total = float(_nbytes(op.type_str))  # outputs
+    sliced: Dict[int, float] = {}
+    if op.opcode == "fusion" and comps is not None:
+        for sub in _called(op):
+            if sub in comps:
+                sliced = _sliced_param_bytes(comps, sub)
+                break
+    for i, tok in enumerate(_operand_names(op)):
+        if i in sliced:
+            total += sliced[i]
+            continue
+        tok = tok.lstrip("%")
+        arrs = _arrays(tok)
+        if arrs:
+            total += sum(_prod(s) * _DTYPE_BYTES[d] for d, s in arrs)
+        else:
+            ts = table.get(tok)
+            if ts:
+                total += _nbytes(ts)
+    return total
+
+
+def _trip_count(cond_ops: List[_Op]) -> int:
+    """Largest integer constant in the loop condition (scan bound)."""
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.match(r"(\d+)\)?", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(op: _Op) -> List[str]:
+    names = []
+    for m in _CALL_ATTR_RE.finditer(op.rest):
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+def parse_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[str, HloCost] = {}
+
+    def comp_cost(name: str, top_level: bool) -> HloCost:
+        key = f"{name}|{top_level}"
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # cycle guard
+        ops = comps.get(name, [])
+        table = {o.name: o.type_str for o in ops}
+        cost = HloCost()
+        for op in ops:
+            if op.opcode == "dot":
+                cost.flops += _dot_flops(op, table)
+            elif op.opcode == "convolution":
+                cost.flops += _conv_flops(op, table)
+            if top_level:
+                cost.hbm_bytes += _op_hbm_bytes(op, table, comps)
+            if op.opcode in _COLLECTIVES:
+                b = float(_nbytes(op.type_str))
+                cost.collective_bytes += b
+                cost.collective_by_type[op.opcode] = (
+                    cost.collective_by_type.get(op.opcode, 0.0) + b
+                )
+                cost.collective_count += 1
+            # recurse into called computations
+            if op.opcode == "while":
+                body, condition = None, None
+                for m in re.finditer(r"(body|condition)=%?([\w.\-]+)", op.rest):
+                    if m.group(1) == "body":
+                        body = m.group(2)
+                    else:
+                        condition = m.group(2)
+                trips = _trip_count(comps.get(condition, [])) if condition else 1
+                cost.while_trip_counts.append(trips)
+                if body:
+                    cost.add(comp_cost(body, top_level).scaled(trips))
+            elif op.opcode in ("fusion", "call", "custom-call", "conditional",
+                               "reduce", "map", "sort", "scatter", "select-and-scatter"):
+                # fusion internals are NOT top-level (no HBM traffic)
+                for sub in _called(op):
+                    if sub in comps:
+                        cost.add(comp_cost(sub, False))
+        memo[key] = cost
+        return cost
+
+    return comp_cost("__entry__", True)

@@ -1,0 +1,150 @@
+"""Fault tolerance: restart loop, straggler detection, elastic re-mesh.
+
+Designed for 1000+ node posture, exercised here on fake device meshes:
+
+* **Checkpoint/restart** — :func:`resilient_train_loop` wraps any step
+  function; on failure (hardware fault, injected fault, preemption) it
+  restores the newest complete checkpoint and replays the data stream from
+  that step (the stream is a pure function of step, see ``data.synthetic``).
+* **Straggler detection** — :class:`StragglerDetector` keeps an EMA of
+  step times and flags z-score outliers; the loop records them and (policy)
+  can trigger a re-mesh.  On real fleets this signal comes per-host; the
+  detection logic is host-count agnostic.
+* **Elastic re-mesh** — :func:`elastic_remesh` moves the training state
+  onto a smaller/larger mesh by re-resolving every leaf's logical sharding
+  against the new mesh and ``device_put``-ing.  Tested 8 -> 4 devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+
+from repro.distributed import partitioning as pt
+from repro.runtime import checkpoint as ckpt_lib
+
+__all__ = ["StragglerDetector", "FailureInjector", "resilient_train_loop",
+           "elastic_remesh"]
+
+
+class StragglerDetector:
+    """EMA-based per-step latency outlier detection."""
+
+    def __init__(self, alpha: float = 0.1, z_threshold: float = 3.0,
+                 warmup: int = 5):
+        self.alpha, self.z = alpha, z_threshold
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.flagged: list = []
+
+    def update(self, step: int, seconds: float) -> bool:
+        self.n += 1
+        if self.mean is None:
+            self.mean = seconds
+            return False
+        delta = seconds - self.mean
+        is_straggler = False
+        if self.n > self.warmup and self.var > 0:
+            zscore = delta / (self.var ** 0.5)
+            if zscore > self.z:
+                is_straggler = True
+                self.flagged.append((step, seconds, zscore))
+        # only fold non-outliers into the stats (outliers would mask repeats)
+        if not is_straggler:
+            self.mean += self.alpha * delta
+            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return is_straggler
+
+
+class FailureInjector:
+    """Deterministic failure injection for restart tests."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+def resilient_train_loop(
+    *,
+    init_state,
+    train_step: Callable,
+    batch_fn: Callable[[int], Dict],
+    total_steps: int,
+    ckpt_dir: str,
+    cfg=None,
+    checkpoint_every: int = 50,
+    keep: int = 3,
+    max_restarts: int = 5,
+    injector: Optional[FailureInjector] = None,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+) -> Tuple[Any, Dict]:
+    """Run to ``total_steps`` surviving failures. Returns (state, report)."""
+    detector = StragglerDetector()
+    restarts = 0
+    state = init_state
+    start = ckpt_lib.latest_step(ckpt_dir)
+    if start is not None:
+        start, state = ckpt_lib.restore(ckpt_dir, state, cfg)
+        start += 1
+    else:
+        start = 0
+
+    step = start
+    while step < total_steps:
+        try:
+            t0 = time.time()
+            if injector is not None:
+                injector.maybe_fail(step)
+            state, metrics = train_step(state, batch_fn(step))
+            jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+            detector.update(step, time.time() - t0)
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if checkpoint_every and (step + 1) % checkpoint_every == 0:
+                ckpt_lib.save(ckpt_dir, step, state, cfg, keep=keep,
+                              blocking=False)
+            step += 1
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            ckpt_lib.wait_pending()
+            last = ckpt_lib.latest_step(ckpt_dir)
+            if last is not None:
+                _, state = ckpt_lib.restore(ckpt_dir, state, cfg)
+                step = last + 1
+            else:
+                state = init_state
+                step = 0
+    ckpt_lib.wait_pending()
+    return state, {
+        "restarts": restarts,
+        "stragglers": list(detector.flagged),
+        "finished_step": step,
+    }
+
+
+def elastic_remesh(state, axes_tree, new_mesh, rules=None):
+    """Re-shard a state pytree onto a new mesh (scale down/up).
+
+    Every leaf's LOGICAL axes are re-resolved against the new mesh shape —
+    dims that no longer divide fall back toward replication via
+    ``shape_aware_spec`` — and the data is device_put across.
+    """
+    def move(axes, leaf):
+        spec = pt.shape_aware_spec(axes, leaf.shape, new_mesh, rules)
+        return jax.device_put(leaf, jax.sharding.NamedSharding(new_mesh, spec))
+
+    return jax.tree_util.tree_map(
+        move, axes_tree, state, is_leaf=lambda x: isinstance(x, tuple)
+    )

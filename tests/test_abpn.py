@@ -1,0 +1,85 @@
+"""ABPN model: anchor, pixel shuffle, execution-path equivalence, quant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import dequantize_layers, fake_quant, quantize, quantize_layers
+from repro.models.abpn import (
+    ABPNConfig,
+    apply_abpn,
+    depth_to_space,
+    init_abpn,
+    make_anchor,
+    param_count,
+)
+
+
+def test_param_count_matches_paper_weight_buffer():
+    layers = init_abpn(jax.random.PRNGKey(0), ABPNConfig())
+    assert param_count(layers) == 43035  # 42840 weights + 195 biases (8-bit)
+
+
+def test_depth_to_space_roundtrip_convention():
+    x = jnp.arange(2 * 3 * 9, dtype=jnp.float32).reshape(2, 3, 9)
+    y = depth_to_space(x, 3)
+    assert y.shape == (6, 9, 1)
+    # block-major: out[y*3+dy, x*3+dx, 0] == in[y, x, dy*3+dx]
+    assert y[0, 0, 0] == x[0, 0, 0]
+    assert y[0, 1, 0] == x[0, 0, 1]
+    assert y[1, 0, 0] == x[0, 0, 3]
+
+
+def test_anchor_is_nearest_upsample():
+    lr = jax.random.uniform(jax.random.PRNGKey(1), (5, 7, 3))
+    up = depth_to_space(make_anchor(lr, 3), 3)
+    nn = jnp.repeat(jnp.repeat(lr, 3, axis=0), 3, axis=1)
+    np.testing.assert_array_equal(np.asarray(up), np.asarray(nn))
+
+
+@pytest.mark.parametrize("method,policy", [
+    ("tilted", "halo"),
+    ("kernel", "zero"),
+])
+def test_execution_paths_agree(method, policy):
+    cfg = ABPNConfig()
+    layers = init_abpn(jax.random.PRNGKey(2), cfg)
+    lr = jax.random.uniform(jax.random.PRNGKey(3), (120, 64, 3))
+    hr_ref = apply_abpn(layers, lr, cfg, method="reference")
+    hr = apply_abpn(layers, lr, cfg, method=method, band_rows=60,
+                    vertical_policy=policy)
+    assert hr.shape == (360, 192, 3)
+    if policy == "halo":
+        np.testing.assert_allclose(np.asarray(hr_ref), np.asarray(hr), atol=1e-5)
+    else:
+        # zero policy: interior rows must agree exactly
+        d = np.abs(np.asarray(hr_ref) - np.asarray(hr)).max(axis=(1, 2))
+        assert d[30:120].max() < 1e-5
+
+
+def test_quant_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 64))
+    q, s = quantize(x)
+    err = np.abs(np.asarray(x) - np.asarray(q, np.float32) * np.asarray(s))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_fake_quant_straight_through_grad():
+    x = jnp.linspace(-1, 1, 32)
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(32), atol=1e-6)
+
+
+def test_quantized_abpn_stays_close():
+    """8-bit deployment (the accelerator's numerics) ~ float within tol."""
+    cfg = ABPNConfig()
+    layers = init_abpn(jax.random.PRNGKey(5), cfg)
+    qlayers = dequantize_layers(quantize_layers(layers))
+    lr = jax.random.uniform(jax.random.PRNGKey(6), (60, 64, 3))
+    hr_f = apply_abpn(layers, lr, cfg, method="reference")
+    hr_q = apply_abpn(qlayers, lr, cfg, method="reference")
+    # PSNR between float and int8-weight outputs should be high
+    mse = float(jnp.mean((hr_f - hr_q) ** 2))
+    psnr = 10 * np.log10(1.0 / max(mse, 1e-12))
+    assert psnr > 40.0

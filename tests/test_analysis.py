@@ -1,0 +1,75 @@
+"""Paper Tables I & II and the 92% DRAM-bandwidth claim."""
+
+import pytest
+
+from repro.core.analysis import (
+    HWConfig,
+    PAPER_CLAIMS,
+    PAPER_TABLE2,
+    buffer_sizes,
+    classical_buffer_sizes,
+    dram_reduction,
+    dram_traffic,
+    pe_throughput_model,
+    weight_bytes,
+)
+
+
+def test_table2_tilted_buffers_exact():
+    b = buffer_sizes()
+    paper = PAPER_TABLE2["tilted"]
+    # eqs (1)-(3) reproduce the paper bit-exactly (decimal KB)
+    assert b["ping_pong_kb"] == pytest.approx(paper["ping_pong"], abs=1e-9)
+    assert b["overlap_kb"] == pytest.approx(paper["overlap"], abs=1e-9)
+    assert b["residual_kb"] == pytest.approx(paper["residual"], abs=1e-9)
+    # weight buffer differs only by bias-width bookkeeping (<1.5%)
+    assert b["weight_kb"] == pytest.approx(paper["weight"], rel=0.015)
+    assert b["total_kb"] == pytest.approx(paper["total"], rel=0.006)
+
+
+def test_table2_classical_buffers():
+    c = classical_buffer_sizes()
+    paper = PAPER_TABLE2["classical"]
+    assert c["ping_pong_kb"] == pytest.approx(paper["ping_pong"], abs=1e-9)
+    assert c["residual_kb"] == pytest.approx(paper["residual"], abs=1e-9)
+    assert c["total_kb"] == pytest.approx(paper["total"], rel=0.006)
+
+
+def test_buffer_saving_is_about_60_percent():
+    t = buffer_sizes()["total_kb"]
+    c = classical_buffer_sizes()["total_kb"]
+    assert 0.55 < 1 - t / c < 0.65  # paper: "nearly 60%"
+
+
+def test_dram_bandwidth_reduction_92_percent():
+    lw = dram_traffic(mode="layerwise")["gb_s"]
+    fu = dram_traffic(mode="fused")["gb_s"]
+    assert lw == pytest.approx(PAPER_CLAIMS["dram_layerwise_gb_s"], rel=0.01)
+    assert fu == pytest.approx(PAPER_CLAIMS["dram_fused_gb_s"], rel=0.03)
+    assert dram_reduction() == pytest.approx(PAPER_CLAIMS["dram_reduction"], abs=0.01)
+
+
+def test_pe_model_reproduces_table1():
+    pe = pe_throughput_model()
+    assert pe["num_macs"] == PAPER_CLAIMS["num_macs"]  # 1260
+    assert pe["meets_60fps"]  # FHD @ 60fps at 600 MHz
+    assert pe["mpix_s_at_target"] == pytest.approx(
+        PAPER_CLAIMS["throughput_mpix_s"], rel=0.001)  # 124.4
+    assert pe["utilization"] == pytest.approx(PAPER_CLAIMS["utilization"], abs=0.02)
+
+
+def test_weight_bytes_matches_param_count():
+    import jax
+    from repro.models.abpn import ABPNConfig, init_abpn, param_count
+    layers = init_abpn(jax.random.PRNGKey(0), ABPNConfig())
+    assert weight_bytes() == param_count(layers)  # 8-bit: bytes == params
+
+
+def test_tile_width_sweep_monotone():
+    """Smaller C shrinks ping-pong cost but the overlap buffer is fixed."""
+    totals = []
+    for c in (2, 4, 8, 16, 32, 60):
+        b = buffer_sizes(HWConfig(tile_cols=c))
+        totals.append(b["total_kb"])
+        assert b["overlap_kb"] == buffer_sizes()["overlap_kb"]
+    assert totals == sorted(totals)

@@ -1,0 +1,121 @@
+"""Attention: flash vs direct softmax, custom VJP, GQA, decode == prefill."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.layers.attention import decode_attention, flash_attention
+from repro.layers.rope import apply_rope
+
+
+def direct(q, k, v, causal=True):
+    D = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q, k) / jnp.sqrt(D)
+    if causal:
+        S, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    return jnp.einsum("bqkgs,bskd->bqkgd", jax.nn.softmax(s, -1), v)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    sq=st.integers(3, 70),
+    kh=st.integers(1, 3),
+    g=st.integers(1, 4),
+    d=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([8, 16, 64]),
+    q_chunk=st.sampled_from([16, 24, 512]),
+    causal=st.booleans(),
+)
+def test_flash_matches_direct(sq, kh, g, d, chunk, q_chunk, causal):
+    ks = jax.random.split(jax.random.PRNGKey(sq * 7 + d), 3)
+    q = jax.random.normal(ks[0], (2, sq, kh, g, d))
+    k = jax.random.normal(ks[1], (2, sq, kh, d))
+    v = jax.random.normal(ks[2], (2, sq, kh, d))
+    out = flash_attention(q, k, v, causal=causal, chunk=chunk, q_chunk=q_chunk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(direct(q, k, v, causal)), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_flash_vjp_matches_direct_grads():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 48, 2, 3, 16))
+    k = jax.random.normal(ks[1], (2, 48, 2, 16))
+    v = jax.random.normal(ks[2], (2, 48, 2, 20))  # Dv != Dqk (MLA case)
+    f = lambda *a: jnp.sum(jnp.sin(flash_attention(*a, causal=True, chunk=16,
+                                                   q_chunk=16)))
+    r = lambda *a: jnp.sum(jnp.sin(direct(*a)))
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5,
+                                   rtol=1e-3)
+
+
+def test_decode_attention_matches_full_at_position():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, Kh, G, D = 2, 32, 2, 2, 8
+    q_all = jax.random.normal(ks[0], (B, S, Kh, G, D))
+    k = jax.random.normal(ks[1], (B, S, Kh, D))
+    v = jax.random.normal(ks[2], (B, S, Kh, D))
+    full = direct(q_all, k, v, causal=True)
+    pos = 17
+    # cache semantics: positions > pos are garbage and must be masked
+    k_cache = k.at[:, pos + 1 :].set(99.0)
+    v_cache = v.at[:, pos + 1 :].set(99.0)
+    out = decode_attention(q_all[:, pos : pos + 1], k_cache, v_cache,
+                           jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, pos]),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_prefill_then_decode_consistency_full_block():
+    """attention_block: decode at position S must equal a train forward
+    over S+1 tokens at its last position."""
+    from repro.layers.attention import attention_block, init_kv_cache_spec
+    from repro.layers.params import init_params
+    from repro.layers.attention import gqa_schema
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    p = init_params(gqa_schema(cfg), jax.random.PRNGKey(2))
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S + 1, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(S + 1, dtype=jnp.int32), (B, S + 1))
+    y_full, _ = attention_block(p, cfg, x, positions, mode="train")
+
+    shape, dtype, _ = init_kv_cache_spec(cfg, B, S + 4)
+    cache = (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    y_pre, cache = attention_block(p, cfg, x[:, :S], positions[:, :S],
+                                   cache=cache, cache_pos=jnp.int32(0),
+                                   mode="prefill")
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :S]),
+                               atol=2e-5, rtol=1e-4)
+    y_dec, _ = attention_block(p, cfg, x[:, S : S + 1], positions[:, S : S + 1],
+                               cache=cache, cache_pos=jnp.int32(S), mode="decode")
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_full[:, S]),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_rope_properties():
+    B, S, H, D = 2, 16, 3, 8
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y = apply_rope(x, pos, theta=1e4)
+    # norm preservation per pair
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, D))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), theta=1e4)
+        kj = apply_rope(k, jnp.array([[j]]), theta=1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), abs=1e-4)
+    assert dot_at(5, 5) == pytest.approx(float(jnp.sum(q * k)), abs=1e-4)

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the deliverable: shape/dtype sweeps + hypothesis cases, allclose
+against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fusion import ConvLayer
+from repro.kernels import ops, ref
+from repro.models.abpn import ABPNConfig, init_abpn
+
+
+def make_layers(key, channels, dtype=jnp.float32):
+    layers = []
+    for i in range(len(channels) - 1):
+        k1, k2, key = jax.random.split(key, 3)
+        ci, co = channels[i], channels[i + 1]
+        layers.append(ConvLayer(
+            w=(jax.random.normal(k1, (3, 3, ci, co)) * 0.2).astype(dtype),
+            b=(jax.random.normal(k2, (co,)) * 0.1).astype(dtype),
+            relu=(i < len(channels) - 2),
+        ))
+    return layers
+
+
+# ----------------------------------------------------------------------
+# conv3x3 (vectorwise single layer)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape,co,tile", [
+    ((60, 64, 28), 28, 8),
+    ((60, 37, 28), 16, 8),   # width not a tile multiple
+    ((15, 8, 3), 5, 4),
+    ((8, 9, 1), 1, 2),
+])
+def test_conv3x3_shapes(shape, co, tile):
+    x = jax.random.uniform(jax.random.PRNGKey(1), shape)
+    w = jax.random.normal(jax.random.PRNGKey(2), (3, 3, shape[2], co)) * 0.2
+    b = jax.random.normal(jax.random.PRNGKey(3), (co,)) * 0.1
+    out = ops.conv3x3(x, w, b, tile_cols=tile)
+    expect = ref.conv3x3_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv3x3_dtypes(dtype):
+    x = jax.random.uniform(jax.random.PRNGKey(4), (20, 24, 8)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(5), (3, 3, 8, 8)) * 0.2).astype(dtype)
+    b = jnp.zeros((8,), dtype)
+    out = ops.conv3x3(x, w, b)
+    expect = ref.conv3x3_ref(x, w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol, rtol=tol)
+
+
+# ----------------------------------------------------------------------
+# tilted fused stack (the paper's kernel)
+# ----------------------------------------------------------------------
+def test_tilted_abpn_exact():
+    layers = make_layers(jax.random.PRNGKey(0), [3, 28, 28, 28, 28, 28, 28, 27])
+    img = jax.random.uniform(jax.random.PRNGKey(1), (120, 64, 3))
+    out = ops.tilted_fused_stack(img, layers, band_rows=60, tile_cols=8)
+    expect = ref.tilted_fused_stack_ref(img, layers, band_rows=60)
+    # 7 layers of reordered f32 accumulation: tolerance scales with depth
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=5e-4, rtol=0)
+
+
+def test_tilted_with_anchor():
+    layers = make_layers(jax.random.PRNGKey(2), [3, 28, 28, 28, 28, 28, 28, 27])
+    img = jax.random.uniform(jax.random.PRNGKey(3), (60, 40, 3))
+    out = ops.tilted_fused_stack(img, layers, band_rows=60, tile_cols=8,
+                                 add_anchor=True)
+    expect = ref.tilted_fused_stack_ref(img, layers, band_rows=60, add_anchor=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=5e-4, rtol=0)
+
+
+def test_tilted_bf16():
+    layers = make_layers(jax.random.PRNGKey(4), [3, 8, 8, 6], dtype=jnp.bfloat16)
+    img = jax.random.uniform(jax.random.PRNGKey(5), (30, 24, 3)).astype(jnp.bfloat16)
+    out = ops.tilted_fused_stack(img, layers, band_rows=30, tile_cols=4)
+    expect = ref.tilted_fused_stack_ref(img, layers, band_rows=30)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=5e-2, rtol=5e-2)
+
+
+def test_tilted_chp_128_lane_padding():
+    """Full MXU lane padding (chp=128) must not change results."""
+    layers = make_layers(jax.random.PRNGKey(6), [3, 28, 28, 27])
+    img = jax.random.uniform(jax.random.PRNGKey(7), (30, 32, 3))
+    out = ops.tilted_fused_stack(img, layers, band_rows=30, tile_cols=8, chp=128)
+    expect = ref.tilted_fused_stack_ref(img, layers, band_rows=30)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    width=st.integers(6, 40),
+    tile=st.integers(2, 8),
+    depth=st.integers(1, 4),
+    ch=st.integers(1, 8),
+    bands=st.integers(1, 2),
+    rows=st.integers(4, 10),
+)
+def test_tilted_fused_property(width, tile, depth, ch, bands, rows):
+    layers = make_layers(jax.random.PRNGKey(depth * 7 + ch), [3] + [ch] * depth)
+    img = jax.random.uniform(jax.random.PRNGKey(11), (bands * rows, width, 3))
+    out = ops.tilted_fused_stack(img, layers, band_rows=rows, tile_cols=tile)
+    expect = ref.tilted_fused_stack_ref(img, layers, band_rows=rows)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_kernel_matches_pure_jax_fusion():
+    """Triangle check: Pallas kernel == lax.scan executor == reference."""
+    from repro.core.fusion import run_banded
+
+    layers = make_layers(jax.random.PRNGKey(8), [3, 12, 12, 9])
+    img = jax.random.uniform(jax.random.PRNGKey(9), (40, 28, 3))
+    k = ops.tilted_fused_stack(img, layers, band_rows=20, tile_cols=4)
+    s = run_banded(img, layers, band_rows=20, tile_cols=4, vertical_policy="zero")
+    np.testing.assert_allclose(np.asarray(k), np.asarray(s), atol=2e-5, rtol=1e-5)

@@ -1,0 +1,106 @@
+"""MoE: routing/capacity semantics vs an explicit per-token reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.layers.moe import capacity, moe_block, moe_schema
+from repro.layers.params import init_params
+
+
+def loop_reference(p, cfg, x):
+    """Token-by-token routing with the same capacity-drop rule."""
+    B, S, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = capacity(cfg, S)
+    logits = np.einsum("bsd,de->bse", np.asarray(x, np.float32),
+                       np.asarray(p["router"], np.float32))
+    probs = jax.nn.softmax(jnp.asarray(logits), -1)
+    out = np.zeros((B, S, d), np.float32)
+    silu = lambda t: t / (1 + np.exp(-t))
+    for b in range(B):
+        counts = np.zeros(e, np.int64)
+        for s in range(S):
+            pr = np.asarray(probs[b, s])
+            top = np.argsort(-pr)[:k]
+            gates = pr[top] / pr[top].sum()
+            for j, ei in enumerate(top):
+                if counts[ei] >= cap:
+                    continue  # dropped
+                counts[ei] += 1
+                xi = np.asarray(x[b, s], np.float32)
+                g = silu(xi @ np.asarray(p["wg"][ei], np.float32))
+                h = g * (xi @ np.asarray(p["wi"][ei], np.float32))
+                out[b, s] += gates[j] * (h @ np.asarray(p["wo"][ei], np.float32))
+    return out
+
+
+def small_cfg(**kw):
+    base = get_config("arctic-480b").reduced(
+        num_experts=4, experts_per_token=2, d_model=16, moe_d_ff=32,
+        capacity_factor=1.5, dense_residual=False)
+    import dataclasses
+    return dataclasses.replace(base, **kw) if kw else base
+
+
+def test_moe_matches_loop_reference():
+    cfg = small_cfg()
+    p = init_params(moe_schema(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    y, metrics = moe_block(p, cfg, x)
+    expect = loop_reference(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), expect, atol=1e-4, rtol=1e-3)
+    assert 0.0 <= float(metrics["moe_dropped_frac"]) < 1.0
+
+
+def test_no_drops_at_high_capacity():
+    cfg = small_cfg(capacity_factor=8.0)
+    p = init_params(moe_schema(cfg), jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model))
+    _, metrics = moe_block(p, cfg, x)
+    assert float(metrics["moe_dropped_frac"]) == 0.0
+
+
+def test_shared_experts_add_dense_path():
+    import dataclasses
+    cfg = dataclasses.replace(small_cfg(), num_shared_experts=2)
+    p = init_params(moe_schema(cfg), jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, cfg.d_model))
+    y_with, _ = moe_block(p, cfg, x)
+    p0 = dict(p)
+    p0["shared"] = jax.tree_util.tree_map(jnp.zeros_like, p["shared"])
+    y_without, _ = moe_block(p0, cfg, x)
+    assert float(jnp.abs(y_with - y_without).max()) > 1e-6
+
+
+def test_aux_loss_balanced_vs_collapsed():
+    """Load-balance loss must be ~1 for uniform routing, >1 for collapse."""
+    cfg = small_cfg()
+    p = init_params(moe_schema(cfg), jax.random.PRNGKey(6))
+    # near-uniform random router (an all-zero router ties -> top_k picks
+    # the first k experts deterministically, which is itself collapse)
+    p_uni = dict(p)
+    p_uni["router"] = jax.random.normal(jax.random.PRNGKey(0),
+                                        p["router"].shape) * 0.01
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 64, cfg.d_model))
+    _, m_uni = moe_block(p_uni, cfg, x)
+    assert float(m_uni["moe_aux_loss"]) == pytest.approx(1.0, abs=0.15)
+    # collapsed router: a linear router needs sign-definite inputs for a
+    # constant argmax, so use positive x with one hot column
+    p_col = dict(p)
+    p_col["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(20.0)
+    x_pos = jnp.abs(x) + 0.5
+    _, m_col = moe_block(p_col, cfg, x_pos)
+    # collapse onto expert 0 (+1 forced runner-up): aux -> ~E/k = 2
+    assert float(m_col["moe_aux_loss"]) > 1.5
+
+
+def test_moe_is_differentiable():
+    cfg = small_cfg()
+    p = init_params(moe_schema(cfg), jax.random.PRNGKey(8))
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 8, cfg.d_model))
+    g = jax.grad(lambda pp: jnp.sum(moe_block(pp, cfg, x)[0] ** 2))(p)
+    norms = [float(jnp.abs(t).max()) for t in jax.tree_util.tree_leaves(g)]
+    assert all(np.isfinite(norms)) and max(norms) > 0

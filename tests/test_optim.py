@@ -1,0 +1,59 @@
+"""AdamW + schedule + clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optim.adamw import adamw_update, global_norm, init_opt_state, lr_schedule
+
+
+def test_adamw_converges_on_quadratic():
+    tcfg = TrainConfig(learning_rate=0.05, warmup_steps=5, total_steps=200,
+                       weight_decay=0.0)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = init_opt_state(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, tcfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clipping_caps_update():
+    tcfg = TrainConfig(grad_clip=1.0, learning_rate=1.0, warmup_steps=0,
+                       total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = init_opt_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw_update(huge, opt, params, tcfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_schedule_warmup_and_decay():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.int32(s), tcfg)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1e-3, rel=1e-6)
+    assert lrs[100] == pytest.approx(1e-4, rel=0.01)  # decays to 10%
+    assert all(b <= a * 1.2001 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_bf16_moments_supported():
+    tcfg = TrainConfig(optimizer_dtype="bfloat16", learning_rate=0.1,
+                       warmup_steps=0)  # update must exceed bf16 ulp at 1.0
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    opt = init_opt_state(params, jnp.bfloat16)
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    new_p, new_opt, _ = adamw_update(g, opt, params, tcfg)
+    assert new_opt["m"]["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert float(jnp.abs(new_p["w"] - params["w"]).max()) > 0
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
