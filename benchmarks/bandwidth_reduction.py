@@ -10,7 +10,7 @@ from __future__ import annotations
 import time
 
 from repro.core.analysis import HWConfig, PAPER_CLAIMS, dram_reduction, dram_traffic
-from repro.core.tiling import make_schedule
+from repro.engine import SRPlan
 
 
 def rows():
@@ -21,9 +21,13 @@ def rows():
 
     # implementation-level check: per band, the kernel streams exactly
     # K*C fresh input columns (disjoint BlockSpec reads) + writes K*C output
-    # columns — matching the model's in+out traffic.
+    # columns — matching the model's in+out traffic.  The schedule is taken
+    # from the serving plan (the same geometry every engine backend runs).
     cfg = HWConfig()
-    sched = make_schedule(cfg.lr_width, cfg.tile_cols, len(cfg.channels) - 1)
+    plan = SRPlan(height=cfg.band_rows, width=cfg.lr_width,
+                  num_layers=len(cfg.channels) - 1, band_rows=cfg.band_rows,
+                  tile_cols=cfg.tile_cols)
+    sched = plan.schedule
     streamed_cols = sum(
         sched.fresh_input_cols(k)[1] - sched.fresh_input_cols(k)[0]
         for k in range(sched.num_tiles)

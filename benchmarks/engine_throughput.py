@@ -1,0 +1,119 @@
+"""Engine serving throughput: frames/s and p50/p95 latency per batch size.
+
+The measurement the tentpole refactor exists for: a batch of LR frames runs
+through ONE jitted engine call (no Python loop over frames or bands), so
+throughput should scale with batch size until the backend saturates.
+
+    PYTHONPATH=src python benchmarks/engine_throughput.py            # CSV rows
+    PYTHONPATH=src python benchmarks/engine_throughput.py --json    # + BENCH_engine.json
+
+Also exposes ``rows()`` for the ``benchmarks/run.py`` harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+
+from repro.data.synthetic import sr_pair_batch
+from repro.engine import VideoStream, make_plan
+from repro.models.abpn import ABPNConfig, init_abpn
+
+DEFAULT_BATCHES = (1, 4, 8)
+
+
+def measure(
+    *,
+    backend: str = "tilted",
+    precision: str = "fp32",
+    height: int = 120,
+    width: int = 64,
+    band_rows: int = 60,
+    batch_sizes=DEFAULT_BATCHES,
+    reps: int = 4,
+) -> dict:
+    """Serve ``reps`` batches per batch size; return the stats per size."""
+    cfg = ABPNConfig()
+    layers = init_abpn(jax.random.PRNGKey(0), cfg)
+    plan = make_plan(layers, (height, width, cfg.in_channels),
+                     band_rows=band_rows, backend=backend,
+                     precision=precision, scale=cfg.scale)
+    results = {}
+    for bs in batch_sizes:
+        stream = VideoStream(plan, layers, batch_size=bs)
+        compile_s = stream.warmup()
+        frames, _ = sr_pair_batch(0, bs * reps, lr_shape=(height, width),
+                                  scale=cfg.scale)
+        stream.run(frames)
+        s = stream.stats()
+        results[str(bs)] = {
+            "frames_per_s": round(s["fps"], 2),
+            "p50_ms": round(s["p50_ms"], 2),
+            "p95_ms": round(s["p95_ms"], 2),
+            "mean_ms": round(s["mean_ms"], 2),
+            "compile_s": round(compile_s, 2),
+            "batches": s["batches"],
+        }
+    return {
+        "bench": "engine_throughput",
+        "backend": backend,
+        "precision": precision,
+        "lr_shape": [height, width, cfg.in_channels],
+        "band_rows": band_rows,
+        "jax_backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "batch": results,
+    }
+
+
+def rows():
+    """Harness rows (kept small: batch 1 and 4, few reps)."""
+    t0 = time.perf_counter()
+    rec = measure(batch_sizes=(1, 4), reps=3)
+    us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for bs, r in rec["batch"].items():
+        out.append((f"engine.throughput.b{bs}", us,
+                    f"{r['frames_per_s']:.1f} frames/s, p50 {r['p50_ms']:.1f} ms "
+                    f"({rec['backend']}/{rec['precision']})"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_engine.json next to this script's repo root")
+    ap.add_argument("--backend", default="tilted",
+                    choices=["reference", "tilted", "kernel"])
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--height", type=int, default=120)
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=4)
+    ap.add_argument("--batches", type=int, nargs="+", default=list(DEFAULT_BATCHES))
+    args = ap.parse_args()
+
+    rec = measure(backend=args.backend, precision=args.precision,
+                  height=args.height, width=args.width,
+                  batch_sizes=tuple(args.batches), reps=args.reps)
+    print("name,us_per_call,derived")
+    for bs, r in rec["batch"].items():
+        print(f'engine.throughput.b{bs},{r["mean_ms"] * 1e3:.1f},'
+              f'"{r["frames_per_s"]:.1f} frames/s p50 {r["p50_ms"]:.1f} ms '
+              f'p95 {r["p95_ms"]:.1f} ms"')
+    if args.json:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "BENCH_engine.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,20 @@ summary of the roofline artifacts if a dry-run sweep exists.
 
 from __future__ import annotations
 
+import os
 import sys
+
+# Allow ``python benchmarks/run.py`` from anywhere: the repo root (parent of
+# this file's directory) must be importable for ``from benchmarks import …``.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     from benchmarks import (
         bandwidth_reduction,
+        engine_throughput,
         kernel_micro,
         psnr_penalty,
         table1_throughput,
@@ -20,7 +28,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     modules = [table1_throughput, table2_buffers, bandwidth_reduction,
-               psnr_penalty, kernel_micro]
+               psnr_penalty, kernel_micro, engine_throughput]
     for mod in modules:
         for name, us, derived in mod.rows():
             print(f'{name},{us:.1f},"{derived}"')

@@ -13,21 +13,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core.analysis import buffer_sizes, dram_reduction, pe_throughput_model
 from repro.data.synthetic import sr_pair_batch
-from repro.models.abpn import ABPNConfig, apply_abpn, init_abpn
+from repro.models.abpn import ABPNConfig, init_abpn
 
 
 def main():
     cfg = ABPNConfig()
     layers = init_abpn(jax.random.PRNGKey(0), cfg)
     lr, _ = sr_pair_batch(0, 1, lr_shape=(120, 64), scale=3)
-    lr = lr[0]
-    print(f"LR {lr.shape} -> HR x{cfg.scale}")
+    print(f"LR {lr.shape[1:]} -> HR x{cfg.scale}")
 
-    ref = apply_abpn(layers, lr, cfg, method="reference")
-    tilted = apply_abpn(layers, lr, cfg, method="tilted", vertical_policy="halo")
-    kernel = apply_abpn(layers, lr, cfg, method="kernel")
+    # One plan per backend; each runs the (here: single-frame) batch in one
+    # jitted engine call.
+    def plan(backend, policy="zero"):
+        return engine.make_plan(layers, lr.shape[1:], backend=backend,
+                                vertical_policy=policy, scale=cfg.scale)
+
+    ref = engine.run(plan("reference"), layers, lr)[0]
+    tilted = engine.run(plan("tilted", "halo"), layers, lr)[0]
+    kernel = engine.run(plan("kernel"), layers, lr)[0]
     print(f"reference vs tilted(halo): max|d| = "
           f"{np.abs(np.asarray(ref) - np.asarray(tilted)).max():.2e}  (exact)")
     print(f"reference vs Pallas kernel: max|d| = "

@@ -1,52 +1,64 @@
-"""Serve super-resolution requests through the tilted-fusion pipeline.
+"""Serve super-resolution through the batched engine (``repro.engine``).
 
-Batched LR frames stream through the Pallas kernel path (the accelerator
-datapath: int8-quantised weights, banded tilted fusion) with per-request
-latency stats — the paper's use case (real-time video SR) as a service.
+Builds one ``SRPlan`` (geometry + numerics + backend), compiles it once,
+then streams batched LR frames through a ``VideoStream`` — the paper's use
+case (real-time video SR) as a service: one jitted call per batch, latency
+tracked per request.
 
-    PYTHONPATH=src python examples/serve_sr.py --requests 8
+    PYTHONPATH=src python examples/serve_sr.py --frames 16 --batch 4
+    PYTHONPATH=src python examples/serve_sr.py --backend tilted --precision bf16
 """
 
 import argparse
-import time
 
 import jax
-import numpy as np
 
-from repro.core.quant import dequantize_layers, quantize_layers
 from repro.data.synthetic import sr_pair_batch
-from repro.models.abpn import ABPNConfig, apply_abpn, init_abpn
+from repro.engine import VideoStream, make_plan
+from repro.models.abpn import ABPNConfig, init_abpn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--frames", type=int, default=8, help="total frames to serve")
+    ap.add_argument("--batch", type=int, default=4, help="frames per engine call")
     ap.add_argument("--height", type=int, default=120)  # paper: 360
     ap.add_argument("--width", type=int, default=64)    # paper: 640
+    ap.add_argument("--band-rows", type=int, default=60)
+    ap.add_argument("--backend", default="kernel",
+                    choices=["reference", "tilted", "kernel"])
+    ap.add_argument("--precision", default="int8",
+                    choices=["fp32", "bf16", "int8"],
+                    help="int8 = the accelerator's weight storage numerics")
     args = ap.parse_args()
 
     cfg = ABPNConfig()
-    # deployment numerics: int8 weights (what the accelerator stores)
-    layers = dequantize_layers(quantize_layers(init_abpn(jax.random.PRNGKey(0), cfg)))
+    layers = init_abpn(jax.random.PRNGKey(0), cfg)
+    plan = make_plan(
+        layers,
+        (args.height, args.width, cfg.in_channels),
+        band_rows=args.band_rows,
+        backend=args.backend,
+        precision=args.precision,
+        scale=cfg.scale,
+    )
 
-    infer = jax.jit(lambda im: apply_abpn(layers, im, cfg, method="kernel",
-                                          band_rows=60, tile_cols=8))
-    lr_frames, _ = sr_pair_batch(0, args.requests,
-                                 lr_shape=(args.height, args.width), scale=3)
-    infer(lr_frames[0]).block_until_ready()  # compile
+    stream = VideoStream(plan, layers, batch_size=args.batch)
+    compile_s = stream.warmup()
 
-    lat = []
-    for i in range(args.requests):
-        t0 = time.perf_counter()
-        hr = infer(lr_frames[i])
-        hr.block_until_ready()
-        lat.append((time.perf_counter() - t0) * 1e3)
-    lat = np.array(lat)
-    pix = args.height * args.width * 9
-    print(f"served {args.requests} frames {args.height}x{args.width} -> "
-          f"{args.height*3}x{args.width*3}")
-    print(f"latency p50 {np.percentile(lat,50):.1f} ms  p95 "
-          f"{np.percentile(lat,95):.1f} ms (CPU interpret mode)")
+    lr_frames, _ = sr_pair_batch(
+        0, args.frames, lr_shape=(args.height, args.width), scale=cfg.scale
+    )
+    hr = stream.run(lr_frames)
+    s = stream.stats()
+
+    print(f"plan: {plan.backend}/{plan.precision}, {plan.num_bands} bands x "
+          f"{plan.schedule.num_tiles} tiles, compile {compile_s:.2f}s")
+    print(f"served {s['frames']} frames {args.height}x{args.width} -> "
+          f"{hr.shape[1]}x{hr.shape[2]} in batches of {args.batch}")
+    print(f"throughput {s['fps']:.1f} frames/s  latency p50 {s['p50_ms']:.1f} ms  "
+          f"p95 {s['p95_ms']:.1f} ms ({jax.default_backend()} backend)")
+    pix = args.height * args.width * cfg.scale ** 2
     print(f"modeled accelerator: {pix/1e6:.2f} Mpix/frame at 124.4 Mpix/s -> "
           f"{pix/124.4e6*1e3:.2f} ms/frame @600 MHz")
 

@@ -1,0 +1,34 @@
+"""Batched SR execution engine (the serving subsystem).
+
+``SRPlan`` (plan.py) describes an execution — geometry, numerics, boundary
+policy, backend — once; ``build_executor``/``run`` (executor.py) compile it
+into a single jitted call over a batch of LR frames; ``VideoStream``
+(stream.py) drives that call as a latency-tracked serving loop.
+
+The legacy entry point ``models.abpn.apply_abpn(method=...)`` is now a thin
+shim over this package.
+"""
+
+from repro.engine.executor import build_executor, prepare_layers, run, sr_features
+from repro.engine.plan import (
+    BACKENDS,
+    PRECISIONS,
+    VERTICAL_POLICIES,
+    SRPlan,
+    make_plan,
+)
+from repro.engine.stream import StreamStats, VideoStream
+
+__all__ = [
+    "SRPlan",
+    "make_plan",
+    "BACKENDS",
+    "PRECISIONS",
+    "VERTICAL_POLICIES",
+    "build_executor",
+    "prepare_layers",
+    "run",
+    "sr_features",
+    "VideoStream",
+    "StreamStats",
+]

@@ -1,0 +1,187 @@
+"""Batched plan executor — one jitted call per frame batch, any backend.
+
+This replaces both the string dispatch in the legacy ``apply_abpn`` and the
+per-band Python loop in ``core.fusion.run_banded``:
+
+* ``reference`` — the full-image layerwise oracle, ``vmap``-ed over frames.
+* ``tilted``    — the pure-JAX tilted sweep.  Frames are reshaped to a flat
+  ``(N * num_bands, R, W, C)`` band axis and the band dimension is folded
+  into a single ``vmap`` (bands of a frame are independent under every
+  vertical policy, including ``halo`` where each band carries its own
+  recompute margin), so the whole batch traces to one XLA computation with
+  no Python-level banding.
+* ``kernel``    — the Pallas datapath; the same flat band axis becomes the
+  kernel's sequential grid dimension (``kernels.ops.tilted_fused_frames``),
+  so a batch of frames is ONE ``pallas_call``.
+
+All backends share the anchor + pixel-shuffle epilogue and the plan's
+numerics policy (fp32 / bf16 / int8 dequant-on-read weights).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import ConvLayer, conv_stack_reference, tilted_fused_band
+from repro.core.quant import dequantize_layers, quantize_layers
+from repro.engine.plan import SRPlan
+
+# models.abpn only imports engine lazily (inside apply_abpn), so the single
+# tested pixel-shuffle/anchor convention can be shared without a cycle.
+from repro.models.abpn import depth_to_space, make_anchor
+
+__all__ = ["prepare_layers", "build_executor", "run", "sr_features"]
+
+
+def prepare_layers(layers: Sequence[ConvLayer], precision: str) -> List[ConvLayer]:
+    """Apply the plan's numerics policy to a float conv stack.
+
+    ``fp32`` passes through; ``bf16`` casts weights/biases (activations are
+    cast at the executor boundary); ``int8`` round-trips the weights through
+    symmetric per-channel quantisation — the accelerator's storage format —
+    and computes in fp32 (dequant-on-read).
+    """
+    if precision == "fp32":
+        return list(layers)
+    if precision == "bf16":
+        return [
+            ConvLayer(
+                w=l.w.astype(jnp.bfloat16), b=l.b.astype(jnp.bfloat16), relu=l.relu
+            )
+            for l in layers
+        ]
+    if precision == "int8":
+        return dequantize_layers(quantize_layers(layers))
+    raise ValueError(f"unknown precision {precision!r}")
+
+
+# ----------------------------------------------------------------------
+# Backend feature executors: (N, H, W, C0) -> (N, H, W, ChL)
+# ----------------------------------------------------------------------
+def _features_reference(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+    return jax.vmap(lambda im: conv_stack_reference(im, layers))(frames)
+
+
+def _features_tilted(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+    N, H, W, C0 = frames.shape
+    R, L = plan.band_rows, plan.num_layers
+    B = plan.num_bands
+    policy = plan.vertical_policy
+
+    if policy in ("zero", "replicate"):
+        bands = frames.reshape(N * B, R, W, C0)
+        out = jax.vmap(
+            lambda band: tilted_fused_band(
+                band, layers, plan.tile_cols, row_pad=policy
+            )
+        )(bands)
+        return out.reshape(N, H, W, out.shape[-1])
+
+    # halo: every band is the (R + 2L)-row slab of the zero-padded frame
+    # starting at its own row offset; rows outside the real image are
+    # phantom and masked per-layer via row_valid (exactly run_banded's
+    # semantics, but uniform across bands so the band axis vmaps).
+    padded = jnp.pad(frames, ((0, 0), (L, L), (0, 0), (0, 0)))
+    starts = jnp.arange(B) * R  # slab start rows within the padded frame
+    slab_rows = R + 2 * L
+
+    def extract(frame_p, r0):
+        return jax.lax.dynamic_slice_in_dim(frame_p, r0, slab_rows, axis=0)
+
+    slabs = jax.vmap(  # over frames
+        lambda fp: jax.vmap(lambda r0: extract(fp, r0))(starts)
+    )(padded)  # (N, B, R+2L, W, C0)
+    slabs = slabs.reshape(N * B, slab_rows, W, C0)
+
+    # Real-image rows of band b's slab: padded rows [L, L+H) intersected
+    # with [b*R, b*R + slab_rows), expressed in slab coordinates.
+    lo = jnp.clip(L - starts, 0, slab_rows)
+    hi = jnp.clip(L + H - starts, 0, slab_rows)
+    lo = jnp.tile(lo, N)
+    hi = jnp.tile(hi, N)
+
+    out = jax.vmap(
+        lambda band, l, h: tilted_fused_band(
+            band, layers, plan.tile_cols, row_pad="zero", row_valid=(l, h)
+        )
+    )(slabs, lo, hi)
+    out = out[:, L : L + R]  # crop the recompute margin
+    return out.reshape(N, H, W, out.shape[-1])
+
+
+def _features_kernel(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+    from repro.kernels import ops  # local import: kernels are optional
+
+    return ops.tilted_fused_frames(
+        frames, layers, band_rows=plan.band_rows, tile_cols=plan.tile_cols
+    )
+
+
+_BACKENDS = {
+    "reference": _features_reference,
+    "tilted": _features_tilted,
+    "kernel": _features_kernel,
+}
+
+
+def sr_features(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+    """Run the plan's conv-stack backend over a frame batch (no epilogue)."""
+    return _BACKENDS[plan.backend](plan, layers, frames)
+
+
+def _execute(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+    """The pure engine computation: ``(plan, layers, frames) -> HR batch``.
+
+    Layers are a pytree ARGUMENT (not a closure), so this traces cleanly
+    under ``grad``/``vmap`` (e.g. the QAT training example differentiates
+    through it) and one jit cache entry serves every weight stack of the
+    same structure.
+    """
+    if frames.ndim != 4:
+        raise ValueError(
+            f"expected a frame batch (N, H, W, C), got shape {frames.shape}"
+        )
+    in_dtype = frames.dtype
+    compute_dtype = jnp.bfloat16 if plan.precision == "bf16" else jnp.float32
+    prepared = prepare_layers(layers, plan.precision)
+    x = frames.astype(compute_dtype)
+    feats = sr_features(plan, prepared, x)
+    # ABPN's residual anchor (nearest-neighbour upsample after the shuffle);
+    # make_anchor broadcasts over the frames axis, depth_to_space is vmapped.
+    out = feats + make_anchor(x, plan.scale)
+    hr = jax.vmap(lambda o: depth_to_space(o, plan.scale))(out)
+    if plan.clip:
+        hr = jnp.clip(hr, 0.0, 1.0)
+    return hr.astype(in_dtype)
+
+
+# SRPlan is frozen/hashable -> static; layers/frames are pytree args, so the
+# jit cache is keyed on (plan, layer structure & shapes, batch shape).
+_execute_jit = jax.jit(_execute, static_argnums=0)
+
+
+def build_executor(
+    plan: SRPlan, layers: Sequence[ConvLayer], jit: bool = True
+) -> Callable[[jax.Array], jax.Array]:
+    """Bind plan + weights into ``frames (N,H,W,C) -> HR (N,sH,sW,C)``.
+
+    The callable is compiled ONCE per batch size; every backend — including
+    ``kernel`` — runs the whole batch inside that single jitted call.
+    """
+    plan.check_invariants()
+    bound = tuple(layers)
+    fn = _execute_jit if jit else _execute
+    return functools.partial(fn, plan, bound)
+
+
+def run(plan: SRPlan, layers: Sequence[ConvLayer], frames: jax.Array) -> jax.Array:
+    """One-shot convenience: run a frame batch through the plan's executor.
+
+    Hits jax's jit cache on repeated calls with the same plan and layer
+    structure — the serving steady state pays one dispatch, no retrace.
+    """
+    return _execute_jit(plan, tuple(layers), frames)

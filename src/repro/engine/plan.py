@@ -1,0 +1,173 @@
+"""SRPlan — the single description of a super-resolution execution.
+
+The repo used to express the tilted-fusion schedule three separate times
+(full-image reference, pure-JAX band loop, Pallas kernel), glued together by
+string dispatch in ``models.abpn.apply_abpn``.  An :class:`SRPlan` captures
+everything those paths need — geometry (bands, tile columns, the
+:class:`~repro.core.tiling.TileSchedule`), numerics (fp32 / bf16 /
+int8-dequant), vertical boundary policy and backend — in one validated,
+hashable object that is built once and reused across frames.  The executor
+layer (``engine.executor``) compiles a plan + weight stack into a single
+jitted callable over a batch of frames.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.tiling import TileSchedule, make_schedule
+
+__all__ = ["SRPlan", "make_plan", "BACKENDS", "PRECISIONS", "VERTICAL_POLICIES"]
+
+BACKENDS = ("reference", "tilted", "kernel")
+PRECISIONS = ("fp32", "bf16", "int8")
+VERTICAL_POLICIES = ("zero", "halo", "replicate")
+
+
+@dataclasses.dataclass(frozen=True)
+class SRPlan:
+    """Static plan for running an SR conv stack over LR frames.
+
+    Geometry:
+      height/width/in_channels: LR frame shape (H, W, C0).
+      num_layers: L, depth of the fused conv stack.
+      band_rows: R, rows per band (paper: 60 for 360-row frames).
+      tile_cols: C, parallelepiped width of the tilted sweep (paper: 8).
+    Numerics:
+      precision: ``fp32`` | ``bf16`` | ``int8`` (int8 = symmetric
+        weight quantisation with dequant-on-read, ``core.quant``).
+    Policy:
+      vertical_policy: ``zero`` | ``halo`` | ``replicate`` band boundaries.
+      backend: ``reference`` | ``tilted`` | ``kernel`` datapath.
+    Output:
+      scale: pixel-shuffle upscale factor (anchor residual is added).
+      clip: clip HR output to [0, 1].
+    """
+
+    height: int
+    width: int
+    in_channels: int = 3
+    num_layers: int = 7
+    band_rows: int = 60
+    tile_cols: int = 8
+    vertical_policy: str = "zero"
+    backend: str = "tilted"
+    precision: str = "fp32"
+    scale: int = 3
+    clip: bool = True
+
+    def __post_init__(self):
+        if self.height <= 0 or self.width <= 0 or self.in_channels <= 0:
+            raise ValueError(
+                f"frame shape ({self.height}, {self.width}, {self.in_channels}) "
+                "must be positive"
+            )
+        if self.num_layers <= 0:
+            raise ValueError(f"num_layers={self.num_layers} must be positive")
+        if self.scale < 1:
+            raise ValueError(f"scale={self.scale} must be >= 1")
+        if self.band_rows <= 0:
+            raise ValueError(f"band_rows={self.band_rows} must be positive")
+        if self.backend != "reference" and self.height % self.band_rows != 0:
+            # the reference backend has no bands; only banded datapaths
+            # need the height to partition evenly
+            raise ValueError(
+                f"height {self.height} must be a multiple of "
+                f"band_rows {self.band_rows} for backend {self.backend!r}"
+            )
+        if self.tile_cols < 2:
+            raise ValueError(
+                f"tile_cols={self.tile_cols} must be >= 2 "
+                "(overlap hand-off is 2 columns)"
+            )
+        if self.vertical_policy not in VERTICAL_POLICIES:
+            raise ValueError(
+                f"vertical_policy {self.vertical_policy!r} not in {VERTICAL_POLICIES}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision {self.precision!r} not in {PRECISIONS}")
+        if self.backend == "kernel" and self.vertical_policy != "zero":
+            raise ValueError(
+                "the Pallas kernel implements the paper's zero (block-conv) "
+                f"vertical policy only, got {self.vertical_policy!r}"
+            )
+
+    # ------------------------------------------------------------------
+    # Derived geometry
+    # ------------------------------------------------------------------
+    @property
+    def num_bands(self) -> int:
+        return self.height // self.band_rows
+
+    @property
+    def schedule(self) -> TileSchedule:
+        """The tilted sweep geometry shared by every backend."""
+        return make_schedule(
+            width=self.width, tile_cols=self.tile_cols, num_layers=self.num_layers
+        )
+
+    @property
+    def lr_shape(self) -> Tuple[int, int, int]:
+        return (self.height, self.width, self.in_channels)
+
+    @property
+    def hr_shape(self) -> Tuple[int, int, int]:
+        return (self.height * self.scale, self.width * self.scale, self.in_channels)
+
+    def check_invariants(self) -> None:
+        """Validate the full plan: field constraints ran in ``__post_init__``;
+        this additionally asserts the tilted schedule's hand-off invariants
+        for every (tile, layer)."""
+        self.schedule.check_invariants()
+
+
+def make_plan(
+    layers: Sequence,
+    lr_shape: Tuple[int, int, int],
+    *,
+    band_rows: int = 60,
+    tile_cols: int = 8,
+    vertical_policy: str = "zero",
+    backend: str = "tilted",
+    precision: str = "fp32",
+    scale: int = 3,
+    clip: bool = True,
+    validate: bool = True,
+) -> SRPlan:
+    """Build (and optionally fully validate) an :class:`SRPlan` from a conv
+    stack and an LR frame shape.
+
+    ``layers`` is a ``Sequence[ConvLayer]`` — only its length and input
+    channel count are read, so quantised stacks work too.
+    """
+    H, W, C0 = lr_shape
+    plan = SRPlan(
+        height=H,
+        width=W,
+        in_channels=C0,
+        num_layers=len(layers),
+        band_rows=band_rows,
+        tile_cols=tile_cols,
+        vertical_policy=vertical_policy,
+        backend=backend,
+        precision=precision,
+        scale=scale,
+        clip=clip,
+    )
+    lc = getattr(layers[0], "ci", None)
+    if lc is not None and lc != C0:
+        raise ValueError(
+            f"layer stack expects {lc} input channels, frames have {C0}"
+        )
+    co = getattr(layers[-1], "co", None)
+    if co is not None and co != C0 * scale * scale:
+        raise ValueError(
+            f"final layer produces {co} channels; the anchor + pixel-shuffle "
+            f"epilogue needs in_channels * scale^2 = {C0 * scale * scale}"
+        )
+    if validate:
+        plan.check_invariants()
+    return plan

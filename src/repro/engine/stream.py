@@ -1,0 +1,113 @@
+"""VideoStream — the serving driver over a compiled SR plan.
+
+Owns exactly one jitted executor (compiled during :meth:`warmup`, or lazily
+on the first batch) and feeds it fixed-size frame batches, recording
+wall-clock latency per call.  This is the paper's use case — real-time
+video SR — expressed as a service loop: compile once, then stream.
+
+Used by ``examples/serve_sr.py`` and ``benchmarks/engine_throughput.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import ConvLayer
+from repro.engine.executor import build_executor
+from repro.engine.plan import SRPlan
+
+__all__ = ["VideoStream", "StreamStats"]
+
+
+class StreamStats(dict):
+    """Latency/throughput summary: frames, batches, fps, p50/p95/mean ms."""
+
+
+class VideoStream:
+    def __init__(
+        self,
+        plan: SRPlan,
+        layers: Sequence[ConvLayer],
+        batch_size: int = 1,
+    ):
+        if batch_size < 1:
+            raise ValueError(f"batch_size={batch_size} must be >= 1")
+        self.plan = plan
+        self.batch_size = batch_size
+        self._fn = build_executor(plan, layers)
+        self._lat_ms: List[float] = []
+        self._frames = 0
+        self._compiled = False
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> float:
+        """Compile the executor on a zero batch; returns compile seconds."""
+        dummy = jnp.zeros((self.batch_size, *self.plan.lr_shape), jnp.float32)
+        t0 = time.perf_counter()
+        self._fn(dummy).block_until_ready()
+        self._compiled = True
+        return time.perf_counter() - t0
+
+    def process(self, frames: jax.Array) -> jax.Array:
+        """Run one batch (N, H, W, C) -> HR, recording its latency.
+
+        The batch size must match the stream's (one compiled program); the
+        first call compiles if :meth:`warmup` was skipped, and that call's
+        latency is excluded from the stats.
+        """
+        if frames.shape[0] != self.batch_size:
+            raise ValueError(
+                f"stream compiled for batch {self.batch_size}, got {frames.shape[0]}"
+            )
+        first = not self._compiled
+        t0 = time.perf_counter()
+        hr = self._fn(frames)
+        hr.block_until_ready()
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self._compiled = True
+        if not first:
+            self._lat_ms.append(dt_ms)
+            self._frames += frames.shape[0]
+        return hr
+
+    def run(self, frames: jax.Array) -> jax.Array:
+        """Stream a long sequence (T, H, W, C) through in batch-size chunks.
+
+        T must be a multiple of the batch size; returns the HR sequence.
+        """
+        T = frames.shape[0]
+        if T % self.batch_size != 0:
+            raise ValueError(
+                f"sequence length {T} not a multiple of batch {self.batch_size}"
+            )
+        outs = [
+            self.process(frames[i : i + self.batch_size])
+            for i in range(0, T, self.batch_size)
+        ]
+        return jnp.concatenate(outs, axis=0)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> StreamStats:
+        lat = np.asarray(self._lat_ms, dtype=np.float64)
+        if lat.size == 0:
+            return StreamStats(frames=0, batches=0, batch_size=self.batch_size,
+                               fps=0.0, p50_ms=0.0, p95_ms=0.0, mean_ms=0.0)
+        total_s = lat.sum() / 1e3
+        return StreamStats(
+            frames=self._frames,
+            batches=int(lat.size),
+            batch_size=self.batch_size,
+            fps=self._frames / total_s if total_s > 0 else float("inf"),
+            p50_ms=float(np.percentile(lat, 50)),
+            p95_ms=float(np.percentile(lat, 95)),
+            mean_ms=float(lat.mean()),
+        )
+
+    def reset_stats(self) -> None:
+        self._lat_ms.clear()
+        self._frames = 0

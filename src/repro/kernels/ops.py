@@ -21,7 +21,13 @@ from repro.core.tiling import make_schedule
 from repro.kernels import conv3x3 as _conv3x3
 from repro.kernels import tilted_fusion as _tilted
 
-__all__ = ["conv3x3", "tilted_fused_stack", "pack_layers", "default_interpret"]
+__all__ = [
+    "conv3x3",
+    "tilted_fused_stack",
+    "tilted_fused_frames",
+    "pack_layers",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -54,28 +60,25 @@ def pack_layers(layers: Sequence[ConvLayer], chp: Optional[int] = None, dtype=No
     return w, b, chp
 
 
-def tilted_fused_stack(
-    x: jax.Array,
+def _tilted_fused_bands(
+    xb: jax.Array,  # (B, R, W, C0) band-major input
     layers: Sequence[ConvLayer],
     *,
-    band_rows: int = 60,
-    tile_cols: int = 8,
-    chp: Optional[int] = None,
-    add_anchor: bool = False,
-    anchor_repeats: int = 9,
-    interpret: Optional[bool] = None,
+    tile_cols: int,
+    chp: Optional[int],
+    add_anchor: bool,
+    anchor_repeats: int,
+    interpret: bool,
 ) -> jax.Array:
-    """Tilted layer fusion of a full (H, W, C0) image via the Pallas kernel.
+    """Run the Pallas kernel over a flat batch of bands -> (B, R, W, ChL).
 
-    Returns (H, W, Ch_L) features (or anchored output when ``add_anchor``),
-    numerically identical to ``ref.tilted_fused_stack_ref``.
+    The band axis is the kernel's sequential grid axis: scratch (overlap
+    queue + residual ring) is re-zeroed whenever the column index wraps, so
+    bands from different frames can share one launch — this is what lets the
+    engine serve a whole frame batch with a single ``pallas_call``.
     """
-    H, W, C0 = x.shape
-    R, C, L = band_rows, tile_cols, len(layers)
-    if H % R != 0:
-        raise ValueError(f"height {H} must be a multiple of band_rows {R}")
-    B = H // R
-    interpret = default_interpret() if interpret is None else interpret
+    B, R, W, C0 = xb.shape
+    C, L = tile_cols, len(layers)
     sched = make_schedule(width=W, tile_cols=C, num_layers=L)
     K = sched.num_tiles
     co_l = layers[-1].co
@@ -83,8 +86,6 @@ def tilted_fused_stack(
     w, b, chp = pack_layers(layers, chp)
     c0p = _round_up(C0, 8)
 
-    # Band-major layout + channel padding.
-    xb = x.reshape(B, R, W, C0)
     xb = jnp.pad(xb, ((0, 0), (0, 0), (0, 0), (0, c0p - C0)))
     # Fresh stream: tile k consumes input columns [k*C + 1, k*C + C].
     xs = jnp.pad(xb, ((0, 0), (0, 0), (0, K * C + 1 - W), (0, 0)))[:, :, 1 : K * C + 1, :]
@@ -104,9 +105,73 @@ def tilted_fused_stack(
         interpret=interpret,
     )
     # Undo the tilt: tile k's block holds F_L columns [k*C - (L-1), ...+C).
-    out = out.reshape(B * R, K * C, chp)
-    out = jax.lax.slice(out, (0, L - 1, 0), (B * R, L - 1 + W, co_l))
+    out = out.reshape(B, R, K * C, chp)
+    out = jax.lax.slice(out, (0, 0, L - 1, 0), (B, R, L - 1 + W, co_l))
     return out
+
+
+def tilted_fused_stack(
+    x: jax.Array,
+    layers: Sequence[ConvLayer],
+    *,
+    band_rows: int = 60,
+    tile_cols: int = 8,
+    chp: Optional[int] = None,
+    add_anchor: bool = False,
+    anchor_repeats: int = 9,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tilted layer fusion of a full (H, W, C0) image via the Pallas kernel.
+
+    Returns (H, W, Ch_L) features (or anchored output when ``add_anchor``),
+    numerically identical to ``ref.tilted_fused_stack_ref``.
+    """
+    H, W, C0 = x.shape
+    R = band_rows
+    if H % R != 0:
+        raise ValueError(f"height {H} must be a multiple of band_rows {R}")
+    interpret = default_interpret() if interpret is None else interpret
+    out = _tilted_fused_bands(
+        x.reshape(H // R, R, W, C0),
+        layers,
+        tile_cols=tile_cols,
+        chp=chp,
+        add_anchor=add_anchor,
+        anchor_repeats=anchor_repeats,
+        interpret=interpret,
+    )
+    return out.reshape(H, W, out.shape[-1])
+
+
+def tilted_fused_frames(
+    frames: jax.Array,
+    layers: Sequence[ConvLayer],
+    *,
+    band_rows: int = 60,
+    tile_cols: int = 8,
+    chp: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Tilted layer fusion of a batch of frames (N, H, W, C0) -> (N, H, W, ChL).
+
+    All N * (H / band_rows) bands are folded into the kernel's sequential
+    band grid axis, so the whole batch is ONE ``pallas_call`` launch.
+    """
+    N, H, W, C0 = frames.shape
+    R = band_rows
+    if H % R != 0:
+        raise ValueError(f"height {H} must be a multiple of band_rows {R}")
+    interpret = default_interpret() if interpret is None else interpret
+    out = _tilted_fused_bands(
+        frames.reshape(N * (H // R), R, W, C0),
+        layers,
+        tile_cols=tile_cols,
+        chp=chp,
+        add_anchor=False,
+        anchor_repeats=1,
+        interpret=interpret,
+    )
+    return out.reshape(N, H, W, out.shape[-1])
 
 
 def conv3x3(

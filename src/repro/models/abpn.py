@@ -7,10 +7,10 @@ and a final 3x3 conv to ``3 * scale**2`` channels followed by the
 network only learns the residual against a nearest-neighbour upsample; a
 pixel shuffle (depth-to-space) then produces the HR image.
 
-Execution paths (all numerically cross-checked in tests):
-  * ``method="reference"``  — full-image layerwise conv (DRAM-spill model)
-  * ``method="tilted"``     — tilted layer fusion via ``core.fusion``
-  * ``method="kernel"``     — the Pallas TPU kernel (``kernels.ops``)
+Execution is delegated to the batched engine subsystem (``repro.engine``):
+build an ``SRPlan`` (backend ``reference`` | ``tilted`` | ``kernel``) and run
+frame batches through one jitted call.  ``apply_abpn(method=...)`` remains as
+a deprecated single-frame shim over that API.
 """
 
 from __future__ import annotations
@@ -21,11 +21,7 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion import (
-    ConvLayer,
-    conv_stack_reference,
-    run_banded,
-)
+from repro.core.fusion import ConvLayer
 
 __all__ = [
     "ABPNConfig",
@@ -109,30 +105,32 @@ def apply_abpn(
     tile_cols: int = 8,
     vertical_policy: str = "zero",
 ) -> jax.Array:
-    """LR (H, W, in_ch) -> HR (H*scale, W*scale, in_ch)."""
-    if method == "reference":
-        feats = conv_stack_reference(lr, layers)
-    elif method == "tilted":
-        feats = run_banded(
-            lr,
-            layers,
-            band_rows=band_rows,
-            tile_cols=tile_cols,
-            vertical_policy=vertical_policy,
-        )
-    elif method == "kernel":
-        from repro.kernels import ops  # local import: kernels are optional
+    """LR (H, W, in_ch) -> HR (H*scale, W*scale, in_ch).
 
-        feats = ops.tilted_fused_stack(
-            lr, layers, band_rows=band_rows, tile_cols=tile_cols
-        )
-    else:
+    .. deprecated::
+        Thin shim over :mod:`repro.engine` kept for existing callers — it
+        rebuilds an :class:`~repro.engine.SRPlan` per call and runs a
+        single-frame batch.  New code should build a plan once with
+        :func:`repro.engine.make_plan` and use :func:`repro.engine.run` /
+        :class:`repro.engine.VideoStream` over frame batches instead.
+    """
+    from repro import engine  # local import: models must not hard-cycle engine
+
+    if method not in ("reference", "tilted", "kernel"):
         raise ValueError(f"unknown method {method!r}")
-    out = feats + make_anchor(lr, cfg.scale)
-    hr = depth_to_space(out, cfg.scale)
-    if cfg.clip:
-        hr = jnp.clip(hr, 0.0, 1.0)
-    return hr
+    if method == "kernel":
+        vertical_policy = "zero"  # the legacy kernel path ignored the policy
+    plan = engine.make_plan(
+        layers,
+        lr.shape,
+        band_rows=band_rows,
+        tile_cols=tile_cols,
+        vertical_policy=vertical_policy,
+        backend=method,
+        scale=cfg.scale,
+        clip=cfg.clip,
+    )
+    return engine.run(plan, layers, lr[None])[0]
 
 
 def param_count(layers: Sequence[ConvLayer]) -> int:

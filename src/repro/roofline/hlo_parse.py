@@ -140,11 +140,9 @@ def _split_computations(text: str) -> Dict[str, List[_Op]]:
     return comps
 
 
-def _first_operand_shapes(op: _Op, table: Dict[str, str], n: int = 2):
-    """Shapes of the first n operands, resolving names via the symbol table."""
-    # take the argument region up to the matching close paren (approximate:
-    # split at '), ' attribute boundary)
-    args = op.rest
+def _arg_region(args: str) -> str:
+    """The operand region of an op line: everything up to the close paren
+    that matches the op's open paren (attributes follow after)."""
     depth, end = 0, len(args)
     for i, ch in enumerate(args):
         if ch == "(":
@@ -154,12 +152,33 @@ def _first_operand_shapes(op: _Op, table: Dict[str, str], n: int = 2):
                 end = i
                 break
             depth -= 1
-    arg_str = args[:end]
+    return args[:end]
+
+
+def _split_args(arg_str: str) -> List[str]:
+    """Split an operand list on top-level commas only.
+
+    Newer XLA prints bare operand names (``%x, %y``); older versions print
+    inline types with layouts (``f32[64,128]{1,0} %x``) whose own commas
+    must not split.
+    """
+    toks, depth, start = [], 0, 0
+    for i, ch in enumerate(arg_str):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            toks.append(arg_str[start:i].strip())
+            start = i + 1
+    toks.append(arg_str[start:].strip())
+    return [t for t in toks if t]
+
+
+def _first_operand_shapes(op: _Op, table: Dict[str, str], n: int = 2):
+    """Shapes of the first n operands, resolving names via the symbol table."""
     shapes = []
-    for tok in arg_str.split(","):
-        tok = tok.strip()
-        if not tok:
-            continue
+    for tok in _split_args(_arg_region(op.rest)):
         arrs = _arrays(tok)
         if arrs:  # operand written with inline type
             shapes.append(arrs[0])
@@ -226,17 +245,7 @@ _SKIP_BYTES = {
 
 
 def _operand_names(op: _Op) -> List[str]:
-    args = op.rest
-    depth, end = 0, len(args)
-    for i, ch in enumerate(args):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            if depth == 0:
-                end = i
-                break
-            depth -= 1
-    return [t.strip() for t in args[:end].split(",") if t.strip()]
+    return _split_args(_arg_region(op.rest))
 
 
 def _sliced_param_bytes(comps, called: str) -> Dict[int, float]:

@@ -1,0 +1,80 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must collect and run in a bare environment (jax + numpy +
+pytest only).  When ``hypothesis`` is available the real package is used —
+see the ``try/except ImportError`` at the top of each property-test module.
+When it is not, this shim supplies the tiny subset the tests use
+(``given``, ``settings``, ``strategies.integers/sampled_from/booleans``)
+backed by a seeded PRNG, so the property tests still run as deterministic
+multi-example smoke tests instead of being skipped wholesale.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies"]
+
+# Fallback sampling is a smoke pass, not a property search: cap the example
+# count so interpret-mode Pallas properties stay fast in CI.
+_MAX_FALLBACK_EXAMPLES = 8
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies`` (used as ``st``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _MAX_FALLBACK_EXAMPLES),
+                    _MAX_FALLBACK_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # Strip the strategy-drawn parameters from the visible signature so
+        # pytest does not try to resolve them as fixtures.
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        del wrapper.__wrapped__  # stop inspect following back to fn
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _MAX_FALLBACK_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

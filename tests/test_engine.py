@@ -1,0 +1,168 @@
+"""Batched engine: plan validation, batched == per-frame, halo exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.fusion import conv_stack_reference
+from repro.models.abpn import ABPNConfig, apply_abpn, init_abpn
+
+CFG = ABPNConfig()
+LAYERS = init_abpn(jax.random.PRNGKey(2), CFG)
+FRAMES = jax.random.uniform(jax.random.PRNGKey(3), (3, 120, 64, 3))
+
+
+# ----------------------------------------------------------------------
+# SRPlan validation
+# ----------------------------------------------------------------------
+def test_plan_validates_geometry():
+    with pytest.raises(ValueError):  # height not a band multiple
+        engine.SRPlan(height=100, width=64, band_rows=60)
+    with pytest.raises(ValueError):  # tile_cols below the overlap hand-off
+        engine.SRPlan(height=120, width=64, tile_cols=1)
+    with pytest.raises(ValueError):
+        engine.SRPlan(height=120, width=64, band_rows=-60)
+    with pytest.raises(ValueError):
+        engine.SRPlan(height=0, width=64)
+
+
+def test_plan_validates_enums():
+    with pytest.raises(ValueError):
+        engine.SRPlan(height=120, width=64, backend="magic")
+    with pytest.raises(ValueError):
+        engine.SRPlan(height=120, width=64, vertical_policy="mirror")
+    with pytest.raises(ValueError):
+        engine.SRPlan(height=120, width=64, precision="fp8")
+    with pytest.raises(ValueError):  # kernel implements the zero policy only
+        engine.SRPlan(height=120, width=64, backend="kernel",
+                      vertical_policy="halo")
+
+
+def test_plan_checks_layer_channels():
+    with pytest.raises(ValueError):
+        engine.make_plan(LAYERS, (120, 64, 4))
+
+
+def test_plan_derived_geometry_and_invariants():
+    plan = engine.make_plan(LAYERS, (120, 64, 3), band_rows=60, tile_cols=8)
+    assert plan.num_bands == 2
+    assert plan.num_layers == 7
+    assert plan.schedule.num_tiles == (64 + 6 + 7) // 8
+    assert plan.hr_shape == (360, 192, 3)
+    plan.check_invariants()  # full tile/layer hand-off sweep
+
+
+# ----------------------------------------------------------------------
+# Batched engine == per-frame legacy shim, all backends
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend,policy", [
+    ("reference", "zero"),
+    ("tilted", "zero"),
+    ("tilted", "halo"),
+    ("tilted", "replicate"),
+    ("kernel", "zero"),
+])
+def test_batched_equals_per_frame(backend, policy):
+    plan = engine.make_plan(LAYERS, FRAMES.shape[1:], band_rows=60,
+                            vertical_policy=policy, backend=backend)
+    batched = engine.run(plan, LAYERS, FRAMES)
+    assert batched.shape == (3, 360, 192, 3)
+    for i in range(FRAMES.shape[0]):
+        single = apply_abpn(LAYERS, FRAMES[i], CFG, method=backend,
+                            band_rows=60, vertical_policy=policy)
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(single))
+
+
+def test_batch_of_8_single_call_per_backend():
+    """Acceptance: 8 frames through one jitted engine call per backend."""
+    frames = jax.random.uniform(jax.random.PRNGKey(9), (8, 60, 32, 3))
+    outs = {}
+    for backend in engine.BACKENDS:
+        plan = engine.make_plan(LAYERS, frames.shape[1:], band_rows=30,
+                                backend=backend)
+        fn = engine.build_executor(plan, LAYERS)
+        outs[backend] = np.asarray(fn(frames))  # one call, whole batch
+        assert outs[backend].shape == (8, 180, 96, 3)
+    # tilted and kernel share the zero band policy -> near-identical
+    np.testing.assert_allclose(outs["tilted"], outs["kernel"],
+                               atol=5e-4, rtol=0)
+
+
+# ----------------------------------------------------------------------
+# Halo exactness via the plan API
+# ----------------------------------------------------------------------
+def test_halo_features_bit_exact_with_reference():
+    plan = engine.make_plan(LAYERS, FRAMES.shape[1:], band_rows=60,
+                            vertical_policy="halo", backend="tilted")
+    feats = engine.sr_features(plan, LAYERS, FRAMES)
+    for i in range(FRAMES.shape[0]):
+        ref = conv_stack_reference(FRAMES[i], LAYERS)
+        np.testing.assert_array_equal(np.asarray(feats[i]), np.asarray(ref))
+
+
+def test_halo_single_band_image():
+    """Halo margins past both image edges (1-band frame) stay exact."""
+    frames = jax.random.uniform(jax.random.PRNGKey(4), (2, 60, 40, 3))
+    plan = engine.make_plan(LAYERS, frames.shape[1:], band_rows=60,
+                            vertical_policy="halo", backend="tilted")
+    feats = engine.sr_features(plan, LAYERS, frames)
+    for i in range(2):
+        ref = conv_stack_reference(frames[i], LAYERS)
+        np.testing.assert_array_equal(np.asarray(feats[i]), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------
+# Numerics policies
+# ----------------------------------------------------------------------
+def test_precision_int8_stays_close():
+    plan32 = engine.make_plan(LAYERS, FRAMES.shape[1:], backend="tilted")
+    plan8 = engine.make_plan(LAYERS, FRAMES.shape[1:], backend="tilted",
+                             precision="int8")
+    hr32 = engine.run(plan32, LAYERS, FRAMES)
+    hr8 = engine.run(plan8, LAYERS, FRAMES)
+    mse = float(jnp.mean((hr32 - hr8) ** 2))
+    psnr = 10 * np.log10(1.0 / max(mse, 1e-12))
+    assert psnr > 40.0
+
+
+def test_precision_bf16_runs_and_tracks_fp32():
+    plan = engine.make_plan(LAYERS, FRAMES.shape[1:], backend="tilted",
+                            precision="bf16")
+    hr = engine.run(plan, LAYERS, FRAMES)
+    assert hr.dtype == FRAMES.dtype  # cast back at the boundary
+    ref = engine.run(
+        engine.make_plan(LAYERS, FRAMES.shape[1:], backend="tilted"),
+        LAYERS, FRAMES)
+    assert float(jnp.max(jnp.abs(hr - ref))) < 0.1
+
+
+# ----------------------------------------------------------------------
+# VideoStream driver
+# ----------------------------------------------------------------------
+def test_video_stream_serves_and_reports():
+    plan = engine.make_plan(LAYERS, (60, 32, 3), band_rows=30,
+                            backend="tilted")
+    stream = engine.VideoStream(plan, LAYERS, batch_size=2)
+    compile_s = stream.warmup()
+    assert compile_s > 0
+    frames = jax.random.uniform(jax.random.PRNGKey(5), (6, 60, 32, 3))
+    hr = stream.run(frames)
+    assert hr.shape == (6, 180, 96, 3)
+    s = stream.stats()
+    assert s["frames"] == 6 and s["batches"] == 3
+    assert s["fps"] > 0 and s["p95_ms"] >= s["p50_ms"] > 0
+    # streamed result == one-shot batch through the same plan
+    np.testing.assert_array_equal(
+        np.asarray(hr), np.asarray(engine.run(plan, LAYERS, frames)))
+
+
+def test_video_stream_rejects_wrong_batch():
+    plan = engine.make_plan(LAYERS, (60, 32, 3), band_rows=30)
+    stream = engine.VideoStream(plan, LAYERS, batch_size=2)
+    with pytest.raises(ValueError):
+        stream.process(jnp.zeros((3, 60, 32, 3)))
+    with pytest.raises(ValueError):
+        stream.run(jnp.zeros((5, 60, 32, 3)))

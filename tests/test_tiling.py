@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback sampler
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.tiling import TileSchedule, make_schedule, phantom_mask
 
