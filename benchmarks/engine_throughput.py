@@ -31,6 +31,7 @@ def measure(
     *,
     backend: str = "tilted",
     precision: str = "fp32",
+    vertical_policy: str = "zero",
     height: int = 120,
     width: int = 64,
     band_rows: int = 60,
@@ -42,6 +43,7 @@ def measure(
     layers = init_abpn(jax.random.PRNGKey(0), cfg)
     plan = make_plan(layers, (height, width, cfg.in_channels),
                      band_rows=band_rows, backend=backend,
+                     vertical_policy=vertical_policy,
                      precision=precision, scale=cfg.scale)
     results = {}
     for bs in batch_sizes:
@@ -63,6 +65,7 @@ def measure(
         "bench": "engine_throughput",
         "backend": backend,
         "precision": precision,
+        "vertical_policy": vertical_policy,
         "lr_shape": [height, width, cfg.in_channels],
         "band_rows": band_rows,
         "jax_backend": jax.default_backend(),
@@ -92,6 +95,9 @@ def main():
                     choices=["reference", "tilted", "kernel"])
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--policy", default="zero",
+                    choices=["zero", "halo", "replicate"],
+                    help="vertical band boundary policy (all backends)")
     ap.add_argument("--height", type=int, default=120)
     ap.add_argument("--width", type=int, default=64)
     ap.add_argument("--reps", type=int, default=4)
@@ -99,6 +105,7 @@ def main():
     args = ap.parse_args()
 
     rec = measure(backend=args.backend, precision=args.precision,
+                  vertical_policy=args.policy,
                   height=args.height, width=args.width,
                   batch_sizes=tuple(args.batches), reps=args.reps)
     print("name,us_per_call,derived")

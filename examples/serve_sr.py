@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--precision", default="int8",
                     choices=["fp32", "bf16", "int8"],
                     help="int8 = the accelerator's weight storage numerics")
+    ap.add_argument("--policy", default="zero",
+                    choices=["zero", "halo", "replicate"],
+                    help="vertical band boundary policy (all backends)")
     args = ap.parse_args()
 
     cfg = ABPNConfig()
@@ -39,6 +42,7 @@ def main():
         (args.height, args.width, cfg.in_channels),
         band_rows=args.band_rows,
         backend=args.backend,
+        vertical_policy=args.policy,
         precision=args.precision,
         scale=cfg.scale,
     )

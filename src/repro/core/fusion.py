@@ -36,6 +36,7 @@ __all__ = [
     "conv_stack_reference",
     "tilted_fused_band",
     "run_banded",
+    "halo_slabs",
     "max_channels",
 ]
 
@@ -207,6 +208,38 @@ def tilted_fused_band(
     # [k*C - (L-1), k*C - (L-1) + C) -> contiguous; slice off the tilt.
     out = tiles.transpose(1, 0, 2, 3).reshape(R, K * C, layers[-1].co)
     return jax.lax.slice_in_dim(out, L - 1, L - 1 + W, axis=1)
+
+
+# ----------------------------------------------------------------------
+# Halo slab marshalling (shared by the tilted and Pallas backends)
+# ----------------------------------------------------------------------
+def halo_slabs(frames: jax.Array, band_rows: int, num_layers: int):
+    """Marshal halo slabs: (N, H, W, C0) -> (N*B, R+2L, W, C0) + (N*B, 2).
+
+    Each band's slab is the (R + 2L)-row window of the zero-padded frame
+    starting at its own row offset; the int32 bounds mark which slab rows
+    are real image content (``[lo, hi)`` in slab coordinates).  Rows
+    outside the bounds are phantom and must be re-zeroed after every conv
+    layer (``tilted_fused_band``'s ``row_valid`` / the kernel's
+    ``row_bounds``) so they behave exactly like SAME padding; cropping L
+    rows per side afterwards reproduces the full-image result.
+
+    This is the ONE definition of the engine's halo geometry — both the
+    pure-JAX executor and the Pallas kernel marshalling consume it.
+    """
+    N, H, W, C0 = frames.shape
+    R, L = band_rows, num_layers
+    B = H // R
+    slab = R + 2 * L
+    padded = jnp.pad(frames, ((0, 0), (L, L), (0, 0), (0, 0)))
+    slabs = jnp.stack(
+        [padded[:, b * R : b * R + slab] for b in range(B)], axis=1
+    )  # (N, B, R+2L, W, C0)
+    starts = np.arange(B) * R
+    lo = np.clip(L - starts, 0, slab)
+    hi = np.clip(L + H - starts, 0, slab)
+    bounds = np.tile(np.stack([lo, hi], axis=1), (N, 1)).astype(np.int32)
+    return slabs.reshape(N * B, slab, W, C0), jnp.asarray(bounds)
 
 
 # ----------------------------------------------------------------------

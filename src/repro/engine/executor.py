@@ -26,7 +26,12 @@ from typing import Callable, List, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion import ConvLayer, conv_stack_reference, tilted_fused_band
+from repro.core.fusion import (
+    ConvLayer,
+    conv_stack_reference,
+    halo_slabs,
+    tilted_fused_band,
+)
 from repro.core.quant import dequantize_layers, quantize_layers
 from repro.engine.plan import SRPlan
 
@@ -84,31 +89,15 @@ def _features_tilted(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
     # halo: every band is the (R + 2L)-row slab of the zero-padded frame
     # starting at its own row offset; rows outside the real image are
     # phantom and masked per-layer via row_valid (exactly run_banded's
-    # semantics, but uniform across bands so the band axis vmaps).
-    padded = jnp.pad(frames, ((0, 0), (L, L), (0, 0), (0, 0)))
-    starts = jnp.arange(B) * R  # slab start rows within the padded frame
-    slab_rows = R + 2 * L
-
-    def extract(frame_p, r0):
-        return jax.lax.dynamic_slice_in_dim(frame_p, r0, slab_rows, axis=0)
-
-    slabs = jax.vmap(  # over frames
-        lambda fp: jax.vmap(lambda r0: extract(fp, r0))(starts)
-    )(padded)  # (N, B, R+2L, W, C0)
-    slabs = slabs.reshape(N * B, slab_rows, W, C0)
-
-    # Real-image rows of band b's slab: padded rows [L, L+H) intersected
-    # with [b*R, b*R + slab_rows), expressed in slab coordinates.
-    lo = jnp.clip(L - starts, 0, slab_rows)
-    hi = jnp.clip(L + H - starts, 0, slab_rows)
-    lo = jnp.tile(lo, N)
-    hi = jnp.tile(hi, N)
-
+    # semantics, but uniform across bands so the band axis vmaps).  The
+    # slab/bounds geometry is shared with the Pallas marshalling
+    # (core.fusion.halo_slabs — the one definition of halo).
+    slabs, bounds = halo_slabs(frames, R, L)
     out = jax.vmap(
         lambda band, l, h: tilted_fused_band(
             band, layers, plan.tile_cols, row_pad="zero", row_valid=(l, h)
         )
-    )(slabs, lo, hi)
+    )(slabs, bounds[:, 0], bounds[:, 1])
     out = out[:, L : L + R]  # crop the recompute margin
     return out.reshape(N, H, W, out.shape[-1])
 
@@ -116,8 +105,18 @@ def _features_tilted(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
 def _features_kernel(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
     from repro.kernels import ops  # local import: kernels are optional
 
+    # The kernel covers the full plan space: zero/replicate run the bands
+    # directly with the matching in-kernel row padding, halo marshals
+    # (R+2L)-row slabs with per-band valid-row bounds, and bf16 plans
+    # compute in bf16 on-chip (frames arrive already cast, so the compute
+    # dtype rides in on the input dtype).
     return ops.tilted_fused_frames(
-        frames, layers, band_rows=plan.band_rows, tile_cols=plan.tile_cols
+        frames,
+        layers,
+        band_rows=plan.band_rows,
+        tile_cols=plan.tile_cols,
+        vertical_policy=plan.vertical_policy,
+        compute_dtype=frames.dtype,
     )
 
 

@@ -89,11 +89,6 @@ class SRPlan:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
         if self.precision not in PRECISIONS:
             raise ValueError(f"precision {self.precision!r} not in {PRECISIONS}")
-        if self.backend == "kernel" and self.vertical_policy != "zero":
-            raise ValueError(
-                "the Pallas kernel implements the paper's zero (block-conv) "
-                f"vertical policy only, got {self.vertical_policy!r}"
-            )
 
     # ------------------------------------------------------------------
     # Derived geometry
@@ -143,6 +138,8 @@ def make_plan(
     ``layers`` is a ``Sequence[ConvLayer]`` — only its length and input
     channel count are read, so quantised stacks work too.
     """
+    if len(layers) == 0:
+        raise ValueError("layer stack is empty")
     H, W, C0 = lr_shape
     plan = SRPlan(
         height=H,

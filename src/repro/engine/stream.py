@@ -4,6 +4,9 @@ Owns exactly one jitted executor (compiled during :meth:`warmup`, or lazily
 on the first batch) and feeds it fixed-size frame batches, recording
 wall-clock latency per call.  This is the paper's use case — real-time
 video SR — expressed as a service loop: compile once, then stream.
+Clips of arbitrary length are served by zero-padding the tail batch up to
+the compiled batch size (no recompilation) and trimming the output; only
+real frames count in the throughput stats.
 
 Used by ``examples/serve_sr.py`` and ``benchmarks/engine_throughput.py``.
 """
@@ -53,16 +56,25 @@ class VideoStream:
         self._compiled = True
         return time.perf_counter() - t0
 
-    def process(self, frames: jax.Array) -> jax.Array:
+    def process(
+        self, frames: jax.Array, real_frames: Optional[int] = None
+    ) -> jax.Array:
         """Run one batch (N, H, W, C) -> HR, recording its latency.
 
         The batch size must match the stream's (one compiled program); the
         first call compiles if :meth:`warmup` was skipped, and that call's
-        latency is excluded from the stats.
+        latency is excluded from the stats.  ``real_frames`` counts only
+        that many leading frames in the throughput stats (the rest are
+        padding, e.g. a clip's tail batch); the full batch is returned.
         """
         if frames.shape[0] != self.batch_size:
             raise ValueError(
                 f"stream compiled for batch {self.batch_size}, got {frames.shape[0]}"
+            )
+        n_real = self.batch_size if real_frames is None else real_frames
+        if not 0 <= n_real <= self.batch_size:
+            raise ValueError(
+                f"real_frames={n_real} outside [0, {self.batch_size}]"
             )
         first = not self._compiled
         t0 = time.perf_counter()
@@ -72,23 +84,31 @@ class VideoStream:
         self._compiled = True
         if not first:
             self._lat_ms.append(dt_ms)
-            self._frames += frames.shape[0]
+            self._frames += n_real
         return hr
 
     def run(self, frames: jax.Array) -> jax.Array:
-        """Stream a long sequence (T, H, W, C) through in batch-size chunks.
+        """Stream a clip (T, H, W, C) through in batch-size chunks.
 
-        T must be a multiple of the batch size; returns the HR sequence.
+        T may be any length: a tail shorter than the batch size is
+        zero-padded up to the compiled batch (same program — no
+        recompilation), the padded outputs are trimmed, and only the T real
+        frames count in the latency stats.  Returns the (T, sH, sW, C) HR
+        sequence.
         """
         T = frames.shape[0]
-        if T % self.batch_size != 0:
-            raise ValueError(
-                f"sequence length {T} not a multiple of batch {self.batch_size}"
-            )
-        outs = [
-            self.process(frames[i : i + self.batch_size])
-            for i in range(0, T, self.batch_size)
-        ]
+        if T == 0:
+            return jnp.zeros((0, *self.plan.hr_shape), frames.dtype)
+        outs = []
+        for i in range(0, T, self.batch_size):
+            chunk = frames[i : i + self.batch_size]
+            n = chunk.shape[0]
+            if n < self.batch_size:  # ragged tail: pad to the compiled batch
+                pad = jnp.zeros(
+                    (self.batch_size - n, *chunk.shape[1:]), chunk.dtype
+                )
+                chunk = jnp.concatenate([chunk, pad], axis=0)
+            outs.append(self.process(chunk, real_frames=n)[:n])
         return jnp.concatenate(outs, axis=0)
 
     # ------------------------------------------------------------------
@@ -102,7 +122,8 @@ class VideoStream:
             frames=self._frames,
             batches=int(lat.size),
             batch_size=self.batch_size,
-            fps=self._frames / total_s if total_s > 0 else float("inf"),
+            # a clock too coarse to resolve the batch reports 0.0, not inf
+            fps=self._frames / total_s if total_s > 0 else 0.0,
             p50_ms=float(np.percentile(lat, 50)),
             p95_ms=float(np.percentile(lat, 95)),
             mean_ms=float(lat.mean()),

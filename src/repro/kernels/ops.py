@@ -16,7 +16,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion import ConvLayer
+from repro.core.fusion import ConvLayer, halo_slabs
 from repro.core.tiling import make_schedule
 from repro.kernels import conv3x3 as _conv3x3
 from repro.kernels import tilted_fusion as _tilted
@@ -28,6 +28,8 @@ __all__ = [
     "pack_layers",
     "default_interpret",
 ]
+
+VERTICAL_POLICIES = ("zero", "halo", "replicate")
 
 
 def default_interpret() -> bool:
@@ -69,6 +71,9 @@ def _tilted_fused_bands(
     add_anchor: bool,
     anchor_repeats: int,
     interpret: bool,
+    row_policy: str = "zero",
+    row_bounds: Optional[jax.Array] = None,
+    compute_dtype=None,
 ) -> jax.Array:
     """Run the Pallas kernel over a flat batch of bands -> (B, R, W, ChL).
 
@@ -83,7 +88,7 @@ def _tilted_fused_bands(
     K = sched.num_tiles
     co_l = layers[-1].co
 
-    w, b, chp = pack_layers(layers, chp)
+    w, b, chp = pack_layers(layers, chp, dtype=compute_dtype)
     c0p = _round_up(C0, 8)
 
     xb = jnp.pad(xb, ((0, 0), (0, 0), (0, 0), (0, c0p - C0)))
@@ -102,6 +107,9 @@ def _tilted_fused_bands(
         add_anchor=add_anchor,
         in_channels=C0,
         anchor_repeats=anchor_repeats,
+        row_policy=row_policy,
+        row_bounds=row_bounds,
+        compute_dtype=compute_dtype,
         interpret=interpret,
     )
     # Undo the tilt: tile k's block holds F_L columns [k*C - (L-1), ...+C).
@@ -119,6 +127,8 @@ def tilted_fused_stack(
     chp: Optional[int] = None,
     add_anchor: bool = False,
     anchor_repeats: int = 9,
+    vertical_policy: str = "zero",
+    compute_dtype=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Tilted layer fusion of a full (H, W, C0) image via the Pallas kernel.
@@ -127,17 +137,16 @@ def tilted_fused_stack(
     numerically identical to ``ref.tilted_fused_stack_ref``.
     """
     H, W, C0 = x.shape
-    R = band_rows
-    if H % R != 0:
-        raise ValueError(f"height {H} must be a multiple of band_rows {R}")
-    interpret = default_interpret() if interpret is None else interpret
-    out = _tilted_fused_bands(
-        x.reshape(H // R, R, W, C0),
+    out = tilted_fused_frames(
+        x[None],
         layers,
+        band_rows=band_rows,
         tile_cols=tile_cols,
         chp=chp,
         add_anchor=add_anchor,
         anchor_repeats=anchor_repeats,
+        vertical_policy=vertical_policy,
+        compute_dtype=compute_dtype,
         interpret=interpret,
     )
     return out.reshape(H, W, out.shape[-1])
@@ -150,27 +159,63 @@ def tilted_fused_frames(
     band_rows: int = 60,
     tile_cols: int = 8,
     chp: Optional[int] = None,
+    add_anchor: bool = False,
+    anchor_repeats: int = 9,
+    vertical_policy: str = "zero",
+    compute_dtype=None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Tilted layer fusion of a batch of frames (N, H, W, C0) -> (N, H, W, ChL).
 
     All N * (H / band_rows) bands are folded into the kernel's sequential
     band grid axis, so the whole batch is ONE ``pallas_call`` launch.
+
+    ``vertical_policy`` selects the band boundary treatment (``zero`` |
+    ``halo`` | ``replicate``, same semantics as ``core.fusion.run_banded``):
+    ``zero``/``replicate`` run the R-row bands directly with the matching
+    in-kernel row padding; ``halo`` marshals (R + 2L)-row slabs with
+    per-band valid-row bounds and crops the recompute margin, so the result
+    is exact w.r.t. the full-image reference up to matmul accumulation
+    order.  ``compute_dtype`` is the kernel's on-chip feature-map dtype
+    (defaults to the input dtype; MXU accumulation stays fp32).
     """
     N, H, W, C0 = frames.shape
     R = band_rows
     if H % R != 0:
         raise ValueError(f"height {H} must be a multiple of band_rows {R}")
+    if vertical_policy not in VERTICAL_POLICIES:
+        raise ValueError(
+            f"vertical_policy {vertical_policy!r} not in {VERTICAL_POLICIES}"
+        )
     interpret = default_interpret() if interpret is None else interpret
-    out = _tilted_fused_bands(
-        frames.reshape(N * (H // R), R, W, C0),
-        layers,
-        tile_cols=tile_cols,
-        chp=chp,
-        add_anchor=False,
-        anchor_repeats=1,
-        interpret=interpret,
-    )
+    L = len(layers)
+    if vertical_policy == "halo":
+        slabs, bounds = halo_slabs(frames, R, L)
+        out = _tilted_fused_bands(
+            slabs,
+            layers,
+            tile_cols=tile_cols,
+            chp=chp,
+            add_anchor=add_anchor,
+            anchor_repeats=anchor_repeats,
+            interpret=interpret,
+            row_policy="zero",
+            row_bounds=bounds,
+            compute_dtype=compute_dtype,
+        )
+        out = out[:, L : L + R]  # crop the recompute margin
+    else:
+        out = _tilted_fused_bands(
+            frames.reshape(N * (H // R), R, W, C0),
+            layers,
+            tile_cols=tile_cols,
+            chp=chp,
+            add_anchor=add_anchor,
+            anchor_repeats=anchor_repeats,
+            interpret=interpret,
+            row_policy=vertical_policy,
+            compute_dtype=compute_dtype,
+        )
     return out.reshape(N, H, W, out.shape[-1])
 
 

@@ -22,6 +22,20 @@ full MXU lanes); padded weights/biases are zero, so padded channels stay
 identically zero through ReLU — no masking needed on channels.  Phantom
 *columns* (outside the image) ARE masked every layer, which keeps the kernel
 bit-compatible with SAME-padded convolution (see ``core.tiling``).
+
+The kernel covers the full ``SRPlan`` space:
+
+* ``row_policy`` selects the vertical boundary treatment of each band —
+  ``zero`` (the paper's block-conv rows) or ``replicate`` (edge-row padding
+  at every layer, matching ``core.fusion._conv_tile``).
+* ``row_bounds`` (per-band ``[lo, hi)`` SMEM scalars) marks real-image rows
+  of a halo slab; rows outside are phantom and re-zeroed after every layer,
+  so an (R + 2L)-row slab cropped by L rows per side reproduces the exact
+  full-image result (the engine's ``halo`` policy).
+* ``compute_dtype`` is the on-chip feature-map dtype: bf16 plans hold the
+  overlap queue / residual ring in bf16 and round every fused feature map to
+  bf16, while MXU accumulation stays fp32 — the TPU-native reading of the
+  chip's reduced-precision datapath.
 """
 
 from __future__ import annotations
@@ -37,9 +51,18 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["tilted_fusion_kernel", "tilted_fusion_call"]
 
 
-def _conv_tile_mxu(f, w_l, b_l, R: int, C: int, chp: int, acc_dtype):
-    """3x3 conv of one (R, C+2, Chp) slab -> (R, C, Chp) via 9 MXU matmuls."""
-    frow = jnp.pad(f, ((1, 1), (0, 0), (0, 0)))  # zero row halo (band policy)
+def _conv_tile_mxu(f, w_l, b_l, R: int, C: int, chp: int, acc_dtype, row_policy: str):
+    """3x3 conv of one (R, C+2, Chp) slab -> (R, C, Chp) via 9 MXU matmuls.
+
+    ``row_policy`` is the band's vertical boundary treatment: ``zero`` pads
+    the +-1 row halo with zeros (the paper's block-conv rows), ``replicate``
+    with copies of the band's edge rows — matching ``core.fusion._conv_tile``
+    so the kernel stays layer-for-layer compatible with the pure-JAX sweep.
+    """
+    if row_policy == "replicate":
+        frow = jnp.concatenate([f[:1], f, f[-1:]], axis=0)
+    else:  # "zero"
+        frow = jnp.pad(f, ((1, 1), (0, 0), (0, 0)))
     acc = jnp.zeros((R * C, chp), acc_dtype)
     for dy in range(3):
         for dx in range(3):
@@ -53,11 +76,12 @@ def _conv_tile_mxu(f, w_l, b_l, R: int, C: int, chp: int, acc_dtype):
 
 
 def tilted_fusion_kernel(
-    # inputs (VMEM blocks)
+    # inputs (VMEM blocks; row bounds live in SMEM)
     first_col_ref,  # (1, R, 1, C0p)   first real input column of the band
     x_ref,  # (1, R, C, C0p)   fresh input stream slab for tile k
     w_ref,  # (L, 3, 3, Chp, Chp)
     b_ref,  # (L, Chp)
+    rows_ref,  # (1, 2) int32   this band's [valid_lo, valid_hi) row range
     # outputs
     o_ref,  # (1, R, C, Chp)
     # scratch (persistent across sequential grid steps)
@@ -74,11 +98,15 @@ def tilted_fusion_kernel(
     add_anchor: bool,
     in_channels: int,
     anchor_repeats: int,
+    row_policy: str = "zero",
+    mask_rows: bool = False,
+    compute_dtype=jnp.float32,
     acc_dtype=jnp.float32,
 ):
     L, C, R, W = num_layers, tile_cols, band_rows, width
     k = pl.program_id(1)  # column-tile index (fastest-varying)
     out_dtype = o_ref.dtype
+    cdt = compute_dtype
 
     # ---- new band: reset the overlap queue and the residual ring ----
     @pl.when(k == 0)
@@ -93,7 +121,7 @@ def tilted_fusion_kernel(
         # columns [-L+1, C]; pre-place col 0 so it lands at ring index L-1.
         resid_ref[:, C + L - 1, :] = first.astype(resid_ref.dtype)
 
-    fresh = x_ref[0].astype(acc_dtype)  # (R, C, C0p)
+    fresh = x_ref[0].astype(cdt)  # (R, C, C0p)
 
     # ---- residual ring: shift left by C, append the fresh slab ----
     if add_anchor:
@@ -102,22 +130,36 @@ def tilted_fusion_kernel(
         resid_ref[...] = ring
 
     # ---- input slab: 2 overlap columns ++ C fresh columns, pad channels ----
-    left0 = overlap_ref[0, :, :, :c0p].astype(acc_dtype)  # (R, 2, C0p)
+    left0 = overlap_ref[0, :, :, :c0p].astype(cdt)  # (R, 2, C0p)
     f = jnp.concatenate([left0, fresh], axis=1)  # (R, C+2, C0p)
     overlap_ref[0, :, :, :c0p] = f[:, -2:, :].astype(overlap_ref.dtype)
     f = jnp.pad(f, ((0, 0), (0, 0), (0, chp - c0p)))
 
     col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, C, 1), 1)
+    if mask_rows:
+        # Phantom rows (outside this band's valid range, e.g. the zero
+        # margin a halo slab carries past the image edge) are re-zeroed
+        # after every layer so they behave exactly like SAME padding.
+        row_iota = jax.lax.broadcasted_iota(jnp.int32, (R, 1, 1), 0)
+        row_ok = (row_iota >= rows_ref[0, 0]) & (row_iota < rows_ref[0, 1])
 
     for l in range(L):
-        g = _conv_tile_mxu(f, w_ref[l].astype(acc_dtype), b_ref[l].astype(acc_dtype), R, C, chp, acc_dtype)
+        g = _conv_tile_mxu(
+            f, w_ref[l].astype(cdt), b_ref[l].astype(acc_dtype),
+            R, C, chp, acc_dtype, row_policy,
+        )
         if relu_flags[l]:
             g = jnp.maximum(g, 0.0)
         # zero phantom columns: this layer's output covers cols k*C - l + [0, C)
         abs_cols = k * C - l + col_iota
         g = jnp.where((abs_cols >= 0) & (abs_cols < W), g, 0.0)
+        if mask_rows:
+            g = jnp.where(row_ok, g, 0.0)
+        # bf16 plans round every fused feature map to the compute dtype —
+        # the on-chip SRAM width — exactly like the pure-JAX sweep does.
+        g = g.astype(cdt)
         if l < L - 1:
-            left = overlap_ref[l + 1, :, :, :].astype(acc_dtype)  # (R, 2, Chp)
+            left = overlap_ref[l + 1, :, :, :].astype(cdt)  # (R, 2, Chp)
             overlap_ref[l + 1, :, :, :] = g[:, -2:, :].astype(overlap_ref.dtype)
             f = jnp.concatenate([left, g], axis=1)  # (R, C+2, Chp)
         else:
@@ -125,7 +167,7 @@ def tilted_fusion_kernel(
                 # anchor = input cols [kC-L+1, kC-L+C) = the ring's head,
                 # each channel repeated scale^2 times (channel-major),
                 # zero-padded up to Chp so padded channels stay clean.
-                anchor = resid_ref[:, :C, :in_channels].astype(acc_dtype)
+                anchor = resid_ref[:, :C, :in_channels].astype(cdt)
                 anchor = jnp.repeat(anchor, anchor_repeats, axis=-1)
                 anchor = jnp.pad(
                     anchor, ((0, 0), (0, 0), (0, chp - in_channels * anchor_repeats))
@@ -148,17 +190,34 @@ def tilted_fusion_call(
     add_anchor: bool,
     in_channels: int,
     anchor_repeats: int = 9,
+    row_policy: str = "zero",
+    row_bounds: jax.Array = None,  # (B, 2) int32 [valid_lo, valid_hi) per band
+    compute_dtype=None,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """Launch the fused kernel over grid (bands, column tiles)."""
+    """Launch the fused kernel over grid (bands, column tiles).
+
+    ``row_policy`` selects the vertical boundary treatment inside every
+    band (``zero`` | ``replicate``); ``row_bounds`` optionally marks each
+    band's real-image row range — rows outside it are phantom and re-zeroed
+    per layer (the halo-slab mechanism); ``compute_dtype`` is the on-chip
+    feature-map dtype (MXU accumulation stays fp32).
+    """
     B, R, KC, c0p = x_stream.shape
     L, _, _, chp, _ = w.shape
     C = tile_cols
     K = KC // C
     if add_anchor and in_channels * anchor_repeats > chp:
         raise ValueError("anchor channels exceed padded channel count")
+    if row_policy not in ("zero", "replicate"):
+        raise ValueError(f"row_policy {row_policy!r} not in ('zero', 'replicate')")
     out_dtype = out_dtype or x_stream.dtype
+    compute_dtype = compute_dtype or x_stream.dtype
+    mask_rows = row_bounds is not None
+    if not mask_rows:  # full-band validity placeholder (kernel ignores it)
+        row_bounds = jnp.broadcast_to(jnp.array([0, R], jnp.int32), (B, 2))
+    row_bounds = row_bounds.astype(jnp.int32)
 
     kernel = functools.partial(
         tilted_fusion_kernel,
@@ -172,6 +231,9 @@ def tilted_fusion_call(
         add_anchor=add_anchor,
         in_channels=in_channels,
         anchor_repeats=anchor_repeats,
+        row_policy=row_policy,
+        mask_rows=mask_rows,
+        compute_dtype=compute_dtype,
     )
     return pl.pallas_call(
         kernel,
@@ -181,12 +243,13 @@ def tilted_fusion_call(
             pl.BlockSpec((1, R, C, c0p), lambda bnd, k: (bnd, 0, k, 0)),
             pl.BlockSpec((L, 3, 3, chp, chp), lambda bnd, k: (0, 0, 0, 0, 0)),
             pl.BlockSpec((L, chp), lambda bnd, k: (0, 0)),
+            pl.BlockSpec((1, 2), lambda bnd, k: (bnd, 0), memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((1, R, C, chp), lambda bnd, k: (bnd, 0, k, 0)),
         out_shape=jax.ShapeDtypeStruct((B, R, KC, chp), out_dtype),
         scratch_shapes=[
-            pltpu.VMEM((L, R, 2, chp), jnp.float32),
-            pltpu.VMEM((R, C + L, c0p), jnp.float32),
+            pltpu.VMEM((L, R, 2, chp), compute_dtype),
+            pltpu.VMEM((R, C + L, c0p), compute_dtype),
         ],
         interpret=interpret,
-    )(first_col, x_stream, w, b)
+    )(first_col, x_stream, w, b, row_bounds)

@@ -118,8 +118,6 @@ def apply_abpn(
 
     if method not in ("reference", "tilted", "kernel"):
         raise ValueError(f"unknown method {method!r}")
-    if method == "kernel":
-        vertical_policy = "zero"  # the legacy kernel path ignored the policy
     plan = engine.make_plan(
         layers,
         lr.shape,

@@ -41,6 +41,7 @@ def test_anchor_is_nearest_upsample():
 @pytest.mark.parametrize("method,policy", [
     ("tilted", "halo"),
     ("kernel", "zero"),
+    pytest.param("kernel", "halo", marks=pytest.mark.slow),
 ])
 def test_execution_paths_agree(method, policy):
     cfg = ABPNConfig()

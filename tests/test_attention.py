@@ -24,6 +24,7 @@ def direct(q, k, v, causal=True):
     return jnp.einsum("bqkgs,bskd->bqkgd", jax.nn.softmax(s, -1), v)
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(
     sq=st.integers(3, 70),
@@ -45,6 +46,7 @@ def test_flash_matches_direct(sq, kh, g, d, chunk, q_chunk, causal):
     )
 
 
+@pytest.mark.slow
 def test_flash_vjp_matches_direct_grads():
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (2, 48, 2, 3, 16))
@@ -77,6 +79,7 @@ def test_decode_attention_matches_full_at_position():
                                atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_consistency_full_block():
     """attention_block: decode at position S must equal a train forward
     over S+1 tokens at its last position."""

@@ -65,6 +65,7 @@ def test_pshard_is_identity_off_mesh():
 # ----------------------------------------------------------------------
 # Multi-device behaviour (subprocess)
 # ----------------------------------------------------------------------
+@pytest.mark.slow
 def test_int8_ef_grad_sync_converges(subproc):
     out = subproc("""
         import jax, jax.numpy as jnp, numpy as np

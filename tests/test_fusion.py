@@ -42,6 +42,7 @@ def test_single_band_bit_exact():
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(til))
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(
     width=st.integers(5, 49),
@@ -59,6 +60,7 @@ def test_band_exactness_property(width, tile_cols, depth, ch, rows):
     np.testing.assert_allclose(np.asarray(ref), np.asarray(til), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_halo_policy_full_image_exact():
     key = jax.random.PRNGKey(5)
     layers = make_layers(key, [3, 8, 8, 5])

@@ -65,6 +65,7 @@ def test_conv3x3_dtypes(dtype):
 # ----------------------------------------------------------------------
 # tilted fused stack (the paper's kernel)
 # ----------------------------------------------------------------------
+@pytest.mark.slow
 def test_tilted_abpn_exact():
     layers = make_layers(jax.random.PRNGKey(0), [3, 28, 28, 28, 28, 28, 28, 27])
     img = jax.random.uniform(jax.random.PRNGKey(1), (120, 64, 3))
@@ -75,6 +76,7 @@ def test_tilted_abpn_exact():
                                atol=5e-4, rtol=0)
 
 
+@pytest.mark.slow
 def test_tilted_with_anchor():
     layers = make_layers(jax.random.PRNGKey(2), [3, 28, 28, 28, 28, 28, 28, 27])
     img = jax.random.uniform(jax.random.PRNGKey(3), (60, 40, 3))
@@ -85,6 +87,7 @@ def test_tilted_with_anchor():
                                atol=5e-4, rtol=0)
 
 
+@pytest.mark.slow
 def test_tilted_bf16():
     layers = make_layers(jax.random.PRNGKey(4), [3, 8, 8, 6], dtype=jnp.bfloat16)
     img = jax.random.uniform(jax.random.PRNGKey(5), (30, 24, 3)).astype(jnp.bfloat16)
@@ -104,6 +107,7 @@ def test_tilted_chp_128_lane_padding():
                                atol=2e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(
     width=st.integers(6, 40),
@@ -122,6 +126,7 @@ def test_tilted_fused_property(width, tile, depth, ch, bands, rows):
                                atol=3e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_kernel_matches_pure_jax_fusion():
     """Triangle check: Pallas kernel == lax.scan executor == reference."""
     from repro.core.fusion import run_banded

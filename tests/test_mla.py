@@ -3,12 +3,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.layers.mla import init_mla_cache_spec, mla_block, mla_schema
 from repro.layers.params import init_params
 
 
+@pytest.mark.slow
 def test_prefill_decode_matches_train_forward():
     """The absorbed decode path (attention in the 512-d latent space) must
     reproduce the decompressed path bit-for-bit (up to fp32 assoc)."""
@@ -45,6 +47,7 @@ def test_cache_is_compressed():
     assert per_token * 50 < full_kv  # >50x smaller
 
 
+@pytest.mark.slow
 def test_mla_grads_finite():
     cfg = get_config("deepseek-v2-236b").reduced()
     p = init_params(mla_schema(cfg), jax.random.PRNGKey(2))

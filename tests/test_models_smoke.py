@@ -50,7 +50,16 @@ def test_full_schema_param_count(arch):
     assert lo <= n <= hi, f"{arch}: {n:.2f}B params out of [{lo}, {hi}]"
 
 
-@pytest.mark.parametrize("arch", LM_ARCH_IDS)
+# the largest reduced configs still take ~5-10s each on CPU; PR CI runs the
+# fast tier, the full-suite job on main covers every architecture
+_HEAVY_ARCHS = {"arctic-480b", "deepseek-v2-236b", "zamba2-2.7b",
+                "seamless-m4t-large-v2"}
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+    for a in LM_ARCH_IDS
+])
 def test_smoke_forward_and_decode(arch):
     cfg = get_config(arch).reduced()
     model = get_model(cfg)
@@ -80,7 +89,11 @@ def test_smoke_forward_and_decode(arch):
     assert np.isfinite(np.asarray(logits2, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-130m", "zamba2-2.7b"])
+@pytest.mark.parametrize("arch", [
+    "qwen2-0.5b",
+    pytest.param("mamba2-130m", marks=pytest.mark.slow),
+    pytest.param("zamba2-2.7b", marks=pytest.mark.slow),
+])
 def test_train_step_decreases_loss(arch):
     cfg = get_config(arch).reduced(remat="none")
     tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=30)

@@ -97,6 +97,7 @@ def test_aux_loss_balanced_vs_collapsed():
     assert float(m_col["moe_aux_loss"]) > 1.5
 
 
+@pytest.mark.slow
 def test_moe_is_differentiable():
     cfg = small_cfg()
     p = init_params(moe_schema(cfg), jax.random.PRNGKey(8))

@@ -1,0 +1,132 @@
+"""Cross-backend parity matrix: ``kernel`` vs the pure-JAX oracles.
+
+Every (vertical_policy × precision) combination must produce the same HR
+output from the Pallas datapath (``backend="kernel"``, interpret mode on
+CPU) as from the pure-JAX tilted sweep (``backend="tilted"``) and the
+band-loop oracle (``core.fusion.run_banded``).
+
+Documented tolerances (max abs diff on a [0, 1] HR output):
+
+| precision | tolerance | source of the difference                         |
+|-----------|-----------|--------------------------------------------------|
+| fp32      | 5e-4      | 9-shifted-MXU-matmul accumulation order vs conv  |
+| int8      | 5e-4      | same fp32 compute over dequantised weights       |
+| bf16      | 5e-2      | bf16 feature maps on both sides; rounding points |
+|           |           | inside the tile differ from the full-band conv   |
+
+fp32/int8 differences are pure float-summation reordering (~1e-6 for the
+ABPN stack); the 5e-4 bound is the documented contract, deliberately loose
+enough to hold on any XLA CPU/TPU build.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.fusion import ConvLayer, run_banded
+from repro.kernels import ops
+from repro.models.abpn import ABPNConfig, init_abpn
+
+TOL = {"fp32": 5e-4, "int8": 5e-4, "bf16": 5e-2}
+
+MATRIX = [(p, q) for p in engine.VERTICAL_POLICIES for q in engine.PRECISIONS]
+
+
+def small_stack(key=0, scale=2):
+    """A 3-layer stack sized for the anchor epilogue at the given scale."""
+    co = 3 * scale * scale
+    channels = [3, 12, 12, co]
+    layers = []
+    k = jax.random.PRNGKey(key)
+    for i in range(len(channels) - 1):
+        k1, k2, k = jax.random.split(k, 3)
+        layers.append(ConvLayer(
+            w=jax.random.normal(k1, (3, 3, channels[i], channels[i + 1])) * 0.2,
+            b=jax.random.normal(k2, (channels[i + 1],)) * 0.1,
+            relu=(i < len(channels) - 2),
+        ))
+    return layers
+
+
+SMALL = small_stack()
+SMALL_FRAMES = jax.random.uniform(jax.random.PRNGKey(1), (2, 40, 24, 3))
+
+
+# ----------------------------------------------------------------------
+# Engine-level matrix: kernel plan == tilted plan, full HR pipeline
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("policy,precision", MATRIX)
+def test_kernel_matches_tilted_matrix(policy, precision):
+    kwargs = dict(band_rows=20, tile_cols=4, scale=2,
+                  vertical_policy=policy, precision=precision)
+    pk = engine.make_plan(SMALL, SMALL_FRAMES.shape[1:], backend="kernel", **kwargs)
+    pt = engine.make_plan(SMALL, SMALL_FRAMES.shape[1:], backend="tilted", **kwargs)
+    hk = engine.run(pk, SMALL, SMALL_FRAMES)
+    ht = engine.run(pt, SMALL, SMALL_FRAMES)
+    assert hk.shape == ht.shape == (2, 80, 48, 3)
+    np.testing.assert_allclose(np.asarray(hk, np.float32),
+                               np.asarray(ht, np.float32),
+                               atol=TOL[precision], rtol=0)
+
+
+# ----------------------------------------------------------------------
+# Ops-level matrix: kernel features == run_banded band-loop oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("policy", engine.VERTICAL_POLICIES)
+def test_kernel_features_match_run_banded(policy):
+    img = SMALL_FRAMES[0]
+    k = ops.tilted_fused_stack(img, SMALL, band_rows=20, tile_cols=4,
+                               vertical_policy=policy)
+    s = run_banded(img, SMALL, band_rows=20, tile_cols=4,
+                   vertical_policy=policy)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(s),
+                               atol=TOL["fp32"], rtol=0)
+
+
+def test_kernel_halo_single_band_image():
+    """Halo margins past both image edges (1-band frame) stay within tol."""
+    frames = jax.random.uniform(jax.random.PRNGKey(4), (2, 20, 24, 3))
+    plan = engine.make_plan(SMALL, frames.shape[1:], band_rows=20, tile_cols=4,
+                            scale=2, vertical_policy="halo", backend="kernel")
+    feats = engine.sr_features(plan, SMALL, frames)
+    for i in range(2):
+        ref = run_banded(frames[i], SMALL, band_rows=20, tile_cols=4,
+                         vertical_policy="halo")
+        np.testing.assert_allclose(np.asarray(feats[i]), np.asarray(ref),
+                                   atol=TOL["fp32"], rtol=0)
+
+
+# ----------------------------------------------------------------------
+# Ragged-tail serving through the kernel backend
+# ----------------------------------------------------------------------
+def test_kernel_ragged_tail_stream_equals_unbatched():
+    plan = engine.make_plan(SMALL, SMALL_FRAMES.shape[1:], band_rows=20,
+                            tile_cols=4, scale=2, backend="kernel")
+    stream = engine.VideoStream(plan, SMALL, batch_size=2)
+    frames = jax.random.uniform(jax.random.PRNGKey(5), (3, 40, 24, 3))
+    hr = stream.run(frames)  # 2 + 1(padded to 2), trimmed back to 3
+    assert hr.shape == (3, 80, 48, 3)
+    np.testing.assert_array_equal(
+        np.asarray(hr), np.asarray(engine.run(plan, SMALL, frames)))
+
+
+# ----------------------------------------------------------------------
+# ABPN-sized matrix (the paper's 7-layer stack) — heavy, full-suite only
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,precision", MATRIX)
+def test_kernel_matches_tilted_matrix_abpn(policy, precision):
+    cfg = ABPNConfig()
+    layers = init_abpn(jax.random.PRNGKey(2), cfg)
+    frames = jax.random.uniform(jax.random.PRNGKey(3), (2, 120, 64, 3))
+    kwargs = dict(band_rows=60, scale=cfg.scale,
+                  vertical_policy=policy, precision=precision)
+    pk = engine.make_plan(layers, frames.shape[1:], backend="kernel", **kwargs)
+    pt = engine.make_plan(layers, frames.shape[1:], backend="tilted", **kwargs)
+    hk = engine.run(pk, layers, frames)
+    ht = engine.run(pt, layers, frames)
+    np.testing.assert_allclose(np.asarray(hk, np.float32),
+                               np.asarray(ht, np.float32),
+                               atol=TOL[precision], rtol=0)

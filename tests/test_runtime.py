@@ -70,6 +70,7 @@ def test_incomplete_checkpoint_ignored(tmp_path):
     assert ck.latest_step(str(tmp_path)) == 3
 
 
+@pytest.mark.slow
 def test_resilient_loop_survives_injected_failures(tmp_path):
     cfg = get_config("qwen2-0.5b").reduced(
         num_layers=2, d_model=32, d_ff=64, vocab_size=128, remat="none")

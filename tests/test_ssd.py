@@ -30,6 +30,7 @@ def make_inputs(key, B, S, H, P, N):
     return x, dt, A, Bm, Cm
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     s=st.sampled_from([16, 32, 64]),
@@ -48,6 +49,7 @@ def test_chunked_equals_recurrence(s, chunk, h, p, n):
                                rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_continues_exactly():
     x, dt, A, Bm, Cm = make_inputs(jax.random.PRNGKey(0), 2, 48, 3, 8, 16)
     y_ref, _ = ssd_reference(x, dt, A, Bm, Cm)
@@ -75,6 +77,7 @@ def test_state_carry_is_the_overlap_buffer():
                                rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_mamba_block_decode_matches_prefill_tail():
     cfg = get_config("mamba2-130m").reduced()
     p = init_params(mamba_schema(cfg), jax.random.PRNGKey(2))

@@ -20,6 +20,7 @@ def psnr(a, b):
     return 10 * np.log10(1.0 / max(mse, 1e-12))
 
 
+@pytest.mark.slow
 def test_train_abpn_improves_psnr():
     """A short training run on synthetic SR pairs beats the anchor
     (nearest-neighbour) baseline — the network learns a real residual."""
@@ -82,6 +83,7 @@ def test_psnr_penalty_below_paper_bound():
     assert min(deltas) > 20.0, deltas
 
 
+@pytest.mark.slow
 def test_lm_train_cli_runs():
     from repro.launch.train import main
 
