@@ -1,8 +1,10 @@
-"""Engine serving throughput: frames/s and p50/p95 latency per batch size.
+"""Engine serving throughput: frames/s, p50/p95 latency, compile cache.
 
-The measurement the tentpole refactor exists for: a batch of LR frames runs
-through ONE jitted engine call (no Python loop over frames or bands), so
-throughput should scale with batch size until the backend saturates.
+The measurement the serving API exists for: batched requests stream
+through an ``SRSession``, whose plan cache compiles ONE executor per
+(plan, batch bucket, dtype) — so throughput scales with batch size and
+repeat requests are pure cache hits.  Records per-bucket compile time and
+the session's cache hit-rate alongside the latency stats.
 
     PYTHONPATH=src python benchmarks/engine_throughput.py            # CSV rows
     PYTHONPATH=src python benchmarks/engine_throughput.py --json    # + BENCH_engine.json
@@ -21,7 +23,7 @@ import time
 import jax
 
 from repro.data.synthetic import sr_pair_batch
-from repro.engine import VideoStream, make_plan
+from repro.engine import SRSession, bucket_batch
 from repro.models.abpn import ABPNConfig, init_abpn
 
 DEFAULT_BATCHES = (1, 4, 8)
@@ -34,43 +36,60 @@ def measure(
     vertical_policy: str = "zero",
     height: int = 120,
     width: int = 64,
-    band_rows: int = 60,
+    band_rows: int | None = None,
     batch_sizes=DEFAULT_BATCHES,
     reps: int = 4,
 ) -> dict:
-    """Serve ``reps`` batches per batch size; return the stats per size."""
+    """Serve ``reps`` requests per batch size through one session; return
+    the stats per size plus the session's compile-cache record."""
     cfg = ABPNConfig()
     layers = init_abpn(jax.random.PRNGKey(0), cfg)
-    plan = make_plan(layers, (height, width, cfg.in_channels),
-                     band_rows=band_rows, backend=backend,
-                     vertical_policy=vertical_policy,
-                     precision=precision, scale=cfg.scale)
+    session = SRSession(
+        layers,
+        backend=backend,
+        precision=precision,
+        vertical_policy=vertical_policy,
+        band_rows=band_rows,
+        scale=cfg.scale,
+    )
     results = {}
     for bs in batch_sizes:
-        stream = VideoStream(plan, layers, batch_size=bs)
-        compile_s = stream.warmup()
+        session.reset_stats()
         frames, _ = sr_pair_batch(0, bs * reps, lr_shape=(height, width),
                                   scale=cfg.scale)
-        stream.run(frames)
-        s = stream.stats()
+        for i in range(0, bs * reps, bs):
+            session.upscale(frames[i : i + bs])
+        s = session.stats()
+        bucket = bucket_batch(bs)
+        compile_s = next(
+            e["compile_s"] for e in session.cache_stats()["entries"]
+            if e["bucket"] == bucket
+        )
         results[str(bs)] = {
             "frames_per_s": round(s["fps"], 2),
             "p50_ms": round(s["p50_ms"], 2),
             "p95_ms": round(s["p95_ms"], 2),
             "mean_ms": round(s["mean_ms"], 2),
             "compile_s": round(compile_s, 2),
+            "bucket": bucket,
             "batches": s["batches"],
         }
+    cache = session.cache_stats()
+    cache["hit_rate"] = round(cache["hit_rate"], 4)
+    for e in cache["entries"]:
+        e["compile_s"] = round(e["compile_s"], 2)
+    plan = session.plan_for((height, width, cfg.in_channels))
     return {
         "bench": "engine_throughput",
         "backend": backend,
         "precision": precision,
         "vertical_policy": vertical_policy,
         "lr_shape": [height, width, cfg.in_channels],
-        "band_rows": band_rows,
+        "band_rows": plan.band_rows,
         "jax_backend": jax.default_backend(),
         "platform": platform.platform(),
         "batch": results,
+        "cache": cache,
     }
 
 
@@ -84,6 +103,9 @@ def rows():
         out.append((f"engine.throughput.b{bs}", us,
                     f"{r['frames_per_s']:.1f} frames/s, p50 {r['p50_ms']:.1f} ms "
                     f"({rec['backend']}/{rec['precision']})"))
+    c = rec["cache"]
+    out.append(("engine.plan_cache", us,
+                f"{c['misses']} compiles, hit rate {c['hit_rate']:.2f}"))
     return out
 
 
@@ -100,6 +122,8 @@ def main():
                     help="vertical band boundary policy (all backends)")
     ap.add_argument("--height", type=int, default=120)
     ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--band-rows", type=int, default=None,
+                    help="band height (default: derived from --height)")
     ap.add_argument("--reps", type=int, default=4)
     ap.add_argument("--batches", type=int, nargs="+", default=list(DEFAULT_BATCHES))
     args = ap.parse_args()
@@ -107,12 +131,17 @@ def main():
     rec = measure(backend=args.backend, precision=args.precision,
                   vertical_policy=args.policy,
                   height=args.height, width=args.width,
+                  band_rows=args.band_rows,
                   batch_sizes=tuple(args.batches), reps=args.reps)
     print("name,us_per_call,derived")
     for bs, r in rec["batch"].items():
         print(f'engine.throughput.b{bs},{r["mean_ms"] * 1e3:.1f},'
               f'"{r["frames_per_s"]:.1f} frames/s p50 {r["p50_ms"]:.1f} ms '
-              f'p95 {r["p95_ms"]:.1f} ms"')
+              f'p95 {r["p95_ms"]:.1f} ms (bucket {r["bucket"]}, '
+              f'compile {r["compile_s"]:.2f}s)"')
+    c = rec["cache"]
+    print(f'engine.plan_cache,0.0,"{c["misses"]} compiles {c["hits"]} hits '
+          f'hit rate {c["hit_rate"]:.2f}"')
     if args.json:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(root, "BENCH_engine.json")

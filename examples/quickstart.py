@@ -40,6 +40,15 @@ def main():
           f"{np.abs(np.asarray(ref) - np.asarray(kernel)).max():.2e}  "
           f"(band-boundary rows only)")
 
+    # Shape/batch-agnostic serving: the same weights behind an SRSession —
+    # any request shape, plans derived + compiled on demand into the cache.
+    session = engine.SRSession.open("abpn_x3", layers=layers, backend="tilted")
+    session.upscale(lr)            # (T, H, W, C) clip
+    session.upscale(lr[0, :60])    # a single half-height frame, new plan
+    c = session.cache_stats()
+    print(f"SRSession: {c['misses']} compiles, {c['hits']} hits for "
+          f"{[tuple(e['lr_shape'][:2]) for e in c['entries']]}")
+
     b = buffer_sizes()
     print(f"\non-chip buffers: {b['total_kb']:.2f} KB (paper: 102.36 KB)")
     print(f"DRAM bandwidth reduction: {dram_reduction()*100:.1f}% (paper: 92%)")

@@ -1,9 +1,11 @@
-"""Serve super-resolution through the batched engine (``repro.engine``).
+"""Serve super-resolution through the SRSession API (``repro.engine``).
 
-Builds one ``SRPlan`` (geometry + numerics + backend), compiles it once,
-then streams batched LR frames through a ``VideoStream`` — the paper's use
-case (real-time video SR) as a service: one jitted call per batch, latency
-tracked per request.
+One session = one model + serving policy; every request shape is handled
+internally: the session derives the band geometry per resolution, buckets
+batch sizes to powers of two, and compiles executors on demand into an
+LRU plan cache.  This demo streams batched requests at the main
+resolution, then a second resolution through the SAME session, and prints
+the compile-cache counters alongside the latency stats.
 
     PYTHONPATH=src python examples/serve_sr.py --frames 16 --batch 4
     PYTHONPATH=src python examples/serve_sr.py --backend tilted --precision bf16
@@ -14,17 +16,17 @@ import argparse
 import jax
 
 from repro.data.synthetic import sr_pair_batch
-from repro.engine import VideoStream, make_plan
-from repro.models.abpn import ABPNConfig, init_abpn
+from repro.engine import SRSession
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="abpn_x3",
+                    help="registered SR model (weights via models.registry)")
     ap.add_argument("--frames", type=int, default=8, help="total frames to serve")
-    ap.add_argument("--batch", type=int, default=4, help="frames per engine call")
+    ap.add_argument("--batch", type=int, default=4, help="frames per request")
     ap.add_argument("--height", type=int, default=120)  # paper: 360
     ap.add_argument("--width", type=int, default=64)    # paper: 640
-    ap.add_argument("--band-rows", type=int, default=60)
     ap.add_argument("--backend", default="kernel",
                     choices=["reference", "tilted", "kernel"])
     ap.add_argument("--precision", default="int8",
@@ -33,36 +35,49 @@ def main():
     ap.add_argument("--policy", default="zero",
                     choices=["zero", "halo", "replicate"],
                     help="vertical band boundary policy (all backends)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = ABPNConfig()
-    layers = init_abpn(jax.random.PRNGKey(0), cfg)
-    plan = make_plan(
-        layers,
-        (args.height, args.width, cfg.in_channels),
-        band_rows=args.band_rows,
+    session = SRSession.open(
+        args.model,
         backend=args.backend,
-        vertical_policy=args.policy,
         precision=args.precision,
-        scale=cfg.scale,
+        vertical_policy=args.policy,
+        seed=args.seed,
     )
 
-    stream = VideoStream(plan, layers, batch_size=args.batch)
-    compile_s = stream.warmup()
+    # Stream the clip as batched requests; the first request per
+    # (resolution, bucket) compiles — on a dummy, outside the latency stats.
+    if args.frames > 0:
+        lr_frames, _ = sr_pair_batch(
+            0, args.frames, lr_shape=(args.height, args.width),
+            scale=session.scale
+        )
+        for i in range(0, args.frames, args.batch):
+            session.upscale(lr_frames[i : i + args.batch])
 
-    lr_frames, _ = sr_pair_batch(
-        0, args.frames, lr_shape=(args.height, args.width), scale=cfg.scale
-    )
-    hr = stream.run(lr_frames)
-    s = stream.stats()
+    s = session.stats()  # main-resolution stats only (snapshot before lr2)
 
-    print(f"plan: {plan.backend}/{plan.precision}, {plan.num_bands} bands x "
-          f"{plan.schedule.num_tiles} tiles, compile {compile_s:.2f}s")
-    print(f"served {s['frames']} frames {args.height}x{args.width} -> "
-          f"{hr.shape[1]}x{hr.shape[2]} in batches of {args.batch}")
+    # Same session, different resolution: no new object graph, just a new
+    # plan-cache entry (shape-agnostic serving is the point of the API).
+    h2, w2 = args.height // 2, args.width
+    if h2 > 0:
+        lr2, _ = sr_pair_batch(1, 2, lr_shape=(h2, w2), scale=session.scale)
+        session.upscale(lr2)
+
+    plan = session.plan_for((args.height, args.width, session.layers[0].ci))
+    c = session.cache_stats()
+    print(f"session: {session.model} {plan.backend}/{plan.precision}, "
+          f"{plan.num_bands} bands x {plan.schedule.num_tiles} tiles")
+    print(f"served {s['frames']} frames over {s['batches']} requests "
+          f"({args.height}x{args.width} -> {plan.hr_shape[0]}x{plan.hr_shape[1]}, "
+          f"plus a {h2}x{w2} request)")
     print(f"throughput {s['fps']:.1f} frames/s  latency p50 {s['p50_ms']:.1f} ms  "
           f"p95 {s['p95_ms']:.1f} ms ({jax.default_backend()} backend)")
-    pix = args.height * args.width * cfg.scale ** 2
+    print(f"plan cache: {c['misses']} compiles, {c['hits']} hits, "
+          f"hit rate {c['hit_rate']:.2f}; buckets "
+          f"{[(tuple(e['lr_shape'][:2]), e['bucket'], round(e['compile_s'], 2)) for e in c['entries']]}")
+    pix = args.height * args.width * session.scale ** 2
     print(f"modeled accelerator: {pix/1e6:.2f} Mpix/frame at 124.4 Mpix/s -> "
           f"{pix/124.4e6*1e3:.2f} ms/frame @600 MHz")
 

@@ -1,31 +1,50 @@
 """Batched SR execution engine (the serving subsystem).
 
-``SRPlan`` (plan.py) describes an execution — geometry, numerics, boundary
-policy, backend — once; ``build_executor``/``run`` (executor.py) compile it
-into a single jitted call over a batch of LR frames; ``VideoStream``
-(stream.py) drives that call as a latency-tracked serving loop.
+``SRSession`` (session.py) is the serving API: ``SRSession.open(model)``
+resolves weights through the model registry, ``session.upscale(frames)``
+serves any ``(H, W, C)`` / ``(T, H, W, C)`` / ``(B, T, H, W, C)`` request —
+deriving the :class:`SRPlan` per resolution (``SRPlan.from_request``),
+bucketing batches to powers of two, and compiling executors on demand into
+an LRU :class:`PlanCache` (``session.cache_stats()``).
 
-The legacy entry point ``models.abpn.apply_abpn(method=...)`` is now a thin
-shim over this package.
+Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
+numerics, boundary policy, backend — and ``build_executor``/``run``
+(executor.py) compile it into a single jitted call over a batch of LR
+frames.  ``VideoStream`` (stream.py) is a deprecated fixed-batch shim over
+a pinned session; ``models.abpn.apply_abpn(method=...)`` is an older shim
+over ``run``.
 """
 
-from repro.engine.executor import build_executor, prepare_layers, run, sr_features
+from repro.engine.executor import (
+    build_executor,
+    output_spec,
+    prepare_layers,
+    run,
+    sr_features,
+)
 from repro.engine.plan import (
     BACKENDS,
     PRECISIONS,
     VERTICAL_POLICIES,
     SRPlan,
+    derive_band_rows,
     make_plan,
 )
-from repro.engine.stream import StreamStats, VideoStream
+from repro.engine.session import PlanCache, SRSession, StreamStats, bucket_batch
+from repro.engine.stream import VideoStream
 
 __all__ = [
+    "SRSession",
+    "PlanCache",
+    "bucket_batch",
     "SRPlan",
     "make_plan",
+    "derive_band_rows",
     "BACKENDS",
     "PRECISIONS",
     "VERTICAL_POLICIES",
     "build_executor",
+    "output_spec",
     "prepare_layers",
     "run",
     "sr_features",

@@ -39,7 +39,7 @@ from repro.engine.plan import SRPlan
 # tested pixel-shuffle/anchor convention can be shared without a cycle.
 from repro.models.abpn import depth_to_space, make_anchor
 
-__all__ = ["prepare_layers", "build_executor", "run", "sr_features"]
+__all__ = ["prepare_layers", "build_executor", "output_spec", "run", "sr_features"]
 
 
 def prepare_layers(layers: Sequence[ConvLayer], precision: str) -> List[ConvLayer]:
@@ -164,17 +164,49 @@ _execute_jit = jax.jit(_execute, static_argnums=0)
 
 
 def build_executor(
-    plan: SRPlan, layers: Sequence[ConvLayer], jit: bool = True
+    plan: SRPlan,
+    layers: Sequence[ConvLayer],
+    jit: bool = True,
+    shared_jit: bool = True,
 ) -> Callable[[jax.Array], jax.Array]:
     """Bind plan + weights into ``frames (N,H,W,C) -> HR (N,sH,sW,C)``.
 
     The callable is compiled ONCE per batch size; every backend — including
     ``kernel`` — runs the whole batch inside that single jitted call.
+
+    ``shared_jit=True`` dispatches through the module-level jit (one global
+    cache shared with ``run`` — compiled programs are pinned for the
+    process).  ``shared_jit=False`` gives the executor its OWN jit wrapper
+    that dies with the returned callable, so nothing at this layer pins the
+    program once the caller (the session's ``PlanCache``) drops it; any
+    residual reuse on a rebuild comes from jax's internal bounded
+    compilation caches, not from this module.
     """
     plan.check_invariants()
     bound = tuple(layers)
-    fn = _execute_jit if jit else _execute
+    if not jit:
+        fn = _execute
+    elif shared_jit:
+        fn = _execute_jit
+    else:
+        fn = jax.jit(_execute, static_argnums=0)
     return functools.partial(fn, plan, bound)
+
+
+def output_spec(
+    plan: SRPlan, layers: Sequence[ConvLayer], batch: int, dtype
+) -> jax.ShapeDtypeStruct:
+    """The shape/dtype the executor emits for a ``(batch, *lr_shape)``
+    input of ``dtype`` — derived by abstract evaluation, no compile.
+
+    This is the one authority on the executor's output contract; degenerate
+    serving paths (empty clips/requests) use it so their zero-length output
+    matches a real batch exactly.
+    """
+    fn = build_executor(plan, layers, jit=False)
+    return jax.eval_shape(
+        fn, jax.ShapeDtypeStruct((batch, *plan.lr_shape), dtype)
+    )
 
 
 def run(plan: SRPlan, layers: Sequence[ConvLayer], frames: jax.Array) -> jax.Array:

@@ -18,11 +18,51 @@ from typing import Sequence, Tuple
 
 from repro.core.tiling import TileSchedule, make_schedule
 
-__all__ = ["SRPlan", "make_plan", "BACKENDS", "PRECISIONS", "VERTICAL_POLICIES"]
+__all__ = [
+    "SRPlan",
+    "make_plan",
+    "check_layer_channels",
+    "derive_band_rows",
+    "BACKENDS",
+    "PRECISIONS",
+    "VERTICAL_POLICIES",
+]
 
 BACKENDS = ("reference", "tilted", "kernel")
 PRECISIONS = ("fp32", "bf16", "int8")
 VERTICAL_POLICIES = ("zero", "halo", "replicate")
+
+# The paper's design point: 60-row bands for 360-row frames.  Requests for
+# other heights derive a legal band height near this (derive_band_rows).
+PREFERRED_BAND_ROWS = 60
+
+# Below this band height the per-band recompute/boundary overhead dominates
+# (the 3x3 stack's receptive field spans 2L+1 rows); rather than slice a
+# frame into slivers, fall back to a single full-height band.
+MIN_BAND_ROWS = 8
+
+
+def derive_band_rows(
+    height: int,
+    preferred: int = PREFERRED_BAND_ROWS,
+    min_rows: int = MIN_BAND_ROWS,
+) -> int:
+    """A legal ``band_rows`` for an arbitrary frame height.
+
+    Banded backends need ``height % band_rows == 0``.  Pick the largest
+    divisor of ``height`` that is ``<= preferred`` (the paper's 60-row
+    design point); if the only such divisors are degenerate slivers
+    (``< min_rows``, e.g. a prime height), serve the frame as one
+    full-height band — always legal for any positive height.
+    """
+    if height <= 0:
+        raise ValueError(f"height={height} must be positive")
+    if height <= preferred:
+        return height
+    for d in range(preferred, 0, -1):
+        if height % d == 0:
+            return d if d >= min_rows else height
+    return height
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +158,57 @@ class SRPlan:
         for every (tile, layer)."""
         self.schedule.check_invariants()
 
+    # ------------------------------------------------------------------
+    # Construction from a serving request
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_request(
+        cls,
+        lr_shape: Tuple[int, int, int],
+        *,
+        num_layers: int,
+        band_rows: int | None = None,
+        tile_cols: int = 8,
+        vertical_policy: str = "zero",
+        backend: str = "tilted",
+        precision: str = "fp32",
+        scale: int = 3,
+        clip: bool = True,
+        preferred_band_rows: int = PREFERRED_BAND_ROWS,
+        validate: bool = True,
+    ) -> "SRPlan":
+        """Build a plan for an arbitrary request shape — the ONE owner of
+        the shape -> geometry derivation.
+
+        ``band_rows=None`` derives a legal band height for the incoming
+        frame (:func:`derive_band_rows`), so any positive ``(H, W, C)`` is
+        servable without the caller knowing the banding rules.  This is
+        what :class:`~repro.engine.session.SRSession` calls per new
+        resolution; ``make_plan`` routes through it with an explicit
+        ``band_rows``.
+        """
+        if len(lr_shape) != 3:
+            raise ValueError(f"lr_shape {lr_shape!r} must be (H, W, C)")
+        H, W, C = (int(x) for x in lr_shape)
+        if band_rows is None:
+            band_rows = derive_band_rows(H, preferred_band_rows)
+        plan = cls(
+            height=H,
+            width=W,
+            in_channels=C,
+            num_layers=num_layers,
+            band_rows=band_rows,
+            tile_cols=tile_cols,
+            vertical_policy=vertical_policy,
+            backend=backend,
+            precision=precision,
+            scale=scale,
+            clip=clip,
+        )
+        if validate:
+            plan.check_invariants()
+        return plan
+
 
 def make_plan(
     layers: Sequence,
@@ -141,10 +232,8 @@ def make_plan(
     if len(layers) == 0:
         raise ValueError("layer stack is empty")
     H, W, C0 = lr_shape
-    plan = SRPlan(
-        height=H,
-        width=W,
-        in_channels=C0,
+    plan = SRPlan.from_request(
+        (H, W, C0),
         num_layers=len(layers),
         band_rows=band_rows,
         tile_cols=tile_cols,
@@ -153,18 +242,26 @@ def make_plan(
         precision=precision,
         scale=scale,
         clip=clip,
+        validate=False,
     )
-    lc = getattr(layers[0], "ci", None)
-    if lc is not None and lc != C0:
-        raise ValueError(
-            f"layer stack expects {lc} input channels, frames have {C0}"
-        )
-    co = getattr(layers[-1], "co", None)
-    if co is not None and co != C0 * scale * scale:
-        raise ValueError(
-            f"final layer produces {co} channels; the anchor + pixel-shuffle "
-            f"epilogue needs in_channels * scale^2 = {C0 * scale * scale}"
-        )
+    check_layer_channels(layers, C0, scale)
     if validate:
         plan.check_invariants()
     return plan
+
+
+def check_layer_channels(layers: Sequence, in_channels: int, scale: int) -> None:
+    """Assert a conv stack fits ``in_channels`` frames and the anchor +
+    pixel-shuffle epilogue at ``scale`` (shared by ``make_plan`` and
+    ``SRSession``)."""
+    lc = getattr(layers[0], "ci", None)
+    if lc is not None and lc != in_channels:
+        raise ValueError(
+            f"layer stack expects {lc} input channels, frames have {in_channels}"
+        )
+    co = getattr(layers[-1], "co", None)
+    if co is not None and co != in_channels * scale * scale:
+        raise ValueError(
+            f"final layer produces {co} channels; the anchor + pixel-shuffle "
+            f"epilogue needs in_channels * scale^2 = {in_channels * scale * scale}"
+        )

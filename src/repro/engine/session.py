@@ -1,0 +1,486 @@
+"""SRSession — shape/batch/model-agnostic serving over a compile cache.
+
+The paper's accelerator serves ONE fixed pipeline (1080p x3 at 60 fps);
+production traffic is heterogeneous: mixed resolutions, clip lengths,
+batch sizes and dtypes.  ``SRSession`` is the serving front door that
+absorbs that heterogeneity:
+
+* ``SRSession.open("abpn_x3", backend=..., precision=...)`` resolves the
+  model's config + weights through ``repro.models.registry``.
+* ``session.upscale(frames)`` accepts ``(H, W, C)``, ``(T, H, W, C)`` or
+  ``(B, T, H, W, C)`` input.  Per new resolution it derives the
+  :class:`~repro.engine.plan.SRPlan` (including a legal ``band_rows`` for
+  the incoming height — ``SRPlan.from_request``), buckets the flattened
+  batch up to a power of two, and compiles one executor per
+  ``(plan, bucket, dtype)`` on demand.
+* Compiled executors live in an LRU :class:`PlanCache`; hit/miss/evict
+  counters and per-entry compile times are exposed via
+  :meth:`SRSession.cache_stats`.
+
+Compilation always happens on a zero dummy **in the dtype being served**,
+inside the cache-miss path — so steady-state latency stats
+(:meth:`SRSession.stats`) never include compile time, and a first batch in
+a new dtype never pays a silent mid-serving compile.
+
+``VideoStream`` (stream.py) is now a deprecated shim over a session pinned
+to one plan and one bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.executor import build_executor, output_spec
+from repro.engine.plan import (
+    PREFERRED_BAND_ROWS,
+    SRPlan,
+    check_layer_channels,
+)
+
+__all__ = [
+    "SRSession",
+    "PlanCache",
+    "StreamStats",
+    "bucket_batch",
+]
+
+
+class StreamStats(dict):
+    """Latency/throughput summary: frames, batches, fps, p50/p95/mean ms."""
+
+
+def latency_stats(lat_ms: Sequence[float], frames: int, **extra) -> StreamStats:
+    """Summarise recorded per-call latencies (compile time never included).
+
+    A clock too coarse to resolve any call reports ``fps=0.0``, not inf.
+    """
+    lat = np.asarray(lat_ms, dtype=np.float64)
+    if lat.size == 0:
+        return StreamStats(frames=0, batches=0, fps=0.0,
+                           p50_ms=0.0, p95_ms=0.0, mean_ms=0.0, **extra)
+    total_s = lat.sum() / 1e3
+    return StreamStats(
+        frames=frames,
+        batches=int(lat.size),
+        fps=frames / total_s if total_s > 0 else 0.0,
+        p50_ms=float(np.percentile(lat, 50)),
+        p95_ms=float(np.percentile(lat, 95)),
+        mean_ms=float(lat.mean()),
+        **extra,
+    )
+
+
+def bucket_batch(n: int) -> int:
+    """Round a batch size up to the next power of two.
+
+    Bucketing bounds the number of compiled programs per plan at
+    ``log2(max batch)`` while wasting at most 2x padding compute on a
+    worst-case batch — the standard serving trade for heterogeneous
+    request sizes.
+    """
+    if n < 1:
+        raise ValueError(f"batch size {n} must be >= 1")
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    """A compiled executor plus the key facts ``cache_stats`` reports."""
+
+    fn: Callable[[jax.Array], jax.Array]
+    plan: SRPlan
+    bucket: int
+    dtype: str
+    compile_s: float
+
+
+class PlanCache:
+    """LRU cache of compiled executors keyed by ``(plan, bucket, dtype)``.
+
+    ``get`` counts a hit (and refreshes recency) or a miss; ``put`` evicts
+    the least-recently-used entry past ``capacity`` and counts the
+    eviction.  Counters are cumulative over the cache's lifetime.
+    """
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity={capacity} must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[tuple, _CacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key) -> Optional[_CacheEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def put(self, key, entry: _CacheEntry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:  # does not touch the counters
+        return key in self._entries
+
+    def keys(self) -> List[tuple]:
+        """Keys in LRU -> MRU order (eviction order)."""
+        return list(self._entries)
+
+    def entries(self) -> List[_CacheEntry]:
+        """Entries in LRU -> MRU order."""
+        return list(self._entries.values())
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hit_rate": self.hits / total if total else 0.0,
+        }
+
+
+class SRSession:
+    """One serving endpoint: fixed weights + policy, any request shape.
+
+    Construct directly from a layer stack, via :meth:`open` (model name ->
+    weights through the registry), or via :meth:`from_plan` (pin an
+    existing plan — the ``VideoStream`` compatibility path).
+    """
+
+    def __init__(
+        self,
+        layers,
+        *,
+        backend: str = "tilted",
+        precision: str = "fp32",
+        vertical_policy: str = "zero",
+        tile_cols: int = 8,
+        band_rows: Optional[int] = None,
+        preferred_band_rows: int = PREFERRED_BAND_ROWS,
+        scale: int = 3,
+        clip: bool = True,
+        cache_capacity: int = 8,
+        max_bucket: Optional[int] = None,
+        model: Optional[str] = None,
+    ):
+        layers = tuple(layers)
+        if not layers:
+            raise ValueError("layer stack is empty")
+        if max_bucket is not None and max_bucket < 1:
+            raise ValueError(f"max_bucket={max_bucket} must be >= 1")
+        self.layers = layers
+        self.model = model
+        self.backend = backend
+        self.precision = precision
+        self.vertical_policy = vertical_policy
+        self.tile_cols = tile_cols
+        self.band_rows = band_rows
+        self.preferred_band_rows = preferred_band_rows
+        self.scale = scale
+        self.clip = clip
+        self.max_bucket = max_bucket
+        self._cache = PlanCache(cache_capacity)
+        # derived-plan / output-dtype memos; bounded like the executor
+        # cache so a long-lived endpoint under arbitrarily diverse
+        # resolutions cannot grow memory monotonically
+        self._memo_cap = 8 * cache_capacity
+        self._plans: Dict[Tuple[int, int, int], SRPlan] = {}
+        self._out_dtypes: Dict[tuple, np.dtype] = {}
+        self._pinned: Optional[SRPlan] = None
+        self._pinned_bucket: Optional[int] = None
+        self._lat_ms: List[float] = []
+        self._frames = 0
+
+    # ------------------------------------------------------------------
+    # Constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def open(
+        cls,
+        model: str = "abpn_x3",
+        *,
+        seed: int = 0,
+        layers=None,
+        scale: Optional[int] = None,
+        clip: Optional[bool] = None,
+        **kwargs,
+    ) -> "SRSession":
+        """Open a session on a registered SR model.
+
+        Weights resolve through ``repro.models.registry.get_sr_model``:
+        the spec's initialiser (seeded by ``seed``) unless an explicit
+        trained ``layers`` stack is passed.  ``scale``/``clip`` default to
+        the model config's values; everything else (backend, precision,
+        vertical_policy, cache_capacity, ...) passes through to
+        :class:`SRSession`.
+        """
+        from repro.models.registry import get_sr_model
+
+        spec = get_sr_model(model)
+        cfg = spec.config
+        if layers is None:
+            layers = spec.init(jax.random.PRNGKey(seed))
+        return cls(
+            layers,
+            scale=cfg.scale if scale is None else scale,
+            clip=cfg.clip if clip is None else clip,
+            model=spec.name,
+            **kwargs,
+        )
+
+    @classmethod
+    def from_plan(
+        cls,
+        plan: SRPlan,
+        layers,
+        *,
+        bucket: Optional[int] = None,
+        cache_capacity: int = 8,
+    ) -> "SRSession":
+        """A session pinned to one plan (and optionally one batch bucket).
+
+        This is what the deprecated ``VideoStream`` wraps: the plan's
+        geometry/numerics are fixed, requests for any other LR shape are
+        rejected, and ``bucket`` (when given) replaces power-of-two
+        bucketing so the stream's exact batch size is the one compiled
+        program.
+        """
+        session = cls(
+            layers,
+            backend=plan.backend,
+            precision=plan.precision,
+            vertical_policy=plan.vertical_policy,
+            tile_cols=plan.tile_cols,
+            band_rows=plan.band_rows,
+            scale=plan.scale,
+            clip=plan.clip,
+            cache_capacity=cache_capacity,
+        )
+        check_layer_channels(session.layers, plan.in_channels, plan.scale)
+        session._pinned = plan
+        session._pinned_bucket = bucket
+        session._plans[plan.lr_shape] = plan
+        return session
+
+    # ------------------------------------------------------------------
+    # Plan + executor resolution
+    # ------------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    def plan_for(self, lr_shape: Tuple[int, int, int]) -> SRPlan:
+        """The session's plan for one LR frame shape (derived once, memoised)."""
+        lr_shape = tuple(int(x) for x in lr_shape)
+        plan = self._plans.get(lr_shape)
+        if plan is not None:
+            return plan
+        if self._pinned is not None:
+            raise ValueError(
+                f"session is pinned to LR shape {self._pinned.lr_shape}, "
+                f"got {lr_shape}"
+            )
+        check_layer_channels(self.layers, lr_shape[2], self.scale)
+        plan = SRPlan.from_request(
+            lr_shape,
+            num_layers=self.num_layers,
+            band_rows=self.band_rows,
+            tile_cols=self.tile_cols,
+            vertical_policy=self.vertical_policy,
+            backend=self.backend,
+            precision=self.precision,
+            scale=self.scale,
+            clip=self.clip,
+            preferred_band_rows=self.preferred_band_rows,
+        )
+        self._memo_put(self._plans, lr_shape, plan)
+        return plan
+
+    def _memo_put(self, memo: dict, key, value) -> None:
+        """Insert into a memo dict, evicting oldest entries past the cap
+        (a pinned session never accumulates shapes, so pins are safe)."""
+        memo[key] = value
+        while len(memo) > self._memo_cap:
+            memo.pop(next(iter(memo)))
+
+    @staticmethod
+    def cache_key(plan: SRPlan, bucket: int, dtype) -> tuple:
+        return (plan, int(bucket), np.dtype(dtype).name)
+
+    def executor_for(
+        self, plan: SRPlan, bucket: int, dtype
+    ) -> Tuple[_CacheEntry, bool]:
+        """The compiled executor for ``(plan, bucket, dtype)``.
+
+        Cache miss compiles NOW, warmed on a zero dummy in the dtype that
+        will actually be served, and records the compile seconds on the
+        entry — so no later ``fn`` call on this key pays compilation.
+        Returns ``(entry, compiled_now)``.
+        """
+        key = self.cache_key(plan, bucket, dtype)
+        entry = self._cache.get(key)
+        if entry is not None:
+            return entry, False
+        # own jit per entry: evicting the entry drops the only reference
+        # this layer holds to the compiled program (the module-level shared
+        # jit would pin it for the process); a re-miss re-acquires and
+        # re-times — fast when jax's internal caches still hold the program
+        fn = build_executor(plan, self.layers, shared_jit=False)
+        dummy = jnp.zeros((bucket, *plan.lr_shape), np.dtype(dtype))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(dummy))
+        compile_s = time.perf_counter() - t0
+        entry = _CacheEntry(
+            fn=fn,
+            plan=plan,
+            bucket=int(bucket),
+            dtype=np.dtype(dtype).name,
+            compile_s=compile_s,
+        )
+        self._cache.put(key, entry)
+        return entry, True
+
+    def output_dtype(self, plan: SRPlan, dtype) -> np.dtype:
+        """The dtype the compiled executor emits for ``dtype`` input
+        (abstract eval — no compile, memoised), so degenerate paths —
+        empty clips — return exactly what a real batch would."""
+        key = (plan, np.dtype(dtype).name)
+        out = self._out_dtypes.get(key)
+        if out is None:
+            out = output_spec(plan, self.layers, 1, np.dtype(dtype)).dtype
+            self._memo_put(self._out_dtypes, key, out)
+        return out
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        if self._pinned_bucket is not None:
+            return self._pinned_bucket
+        bucket = bucket_batch(n)
+        if self.max_bucket is not None:
+            # clamp DOWN to the largest power of two within the cap — the
+            # cap is a ceiling (e.g. device memory), never exceeded
+            cap = 1 << (self.max_bucket.bit_length() - 1)
+            bucket = min(bucket, cap)
+        return bucket
+
+    def upscale(self, frames) -> jax.Array:
+        """Super-resolve frames of any supported rank.
+
+        ``(H, W, C)`` -> ``(sH, sW, C)``; ``(T, H, W, C)`` ->
+        ``(T, sH, sW, C)``; ``(B, T, H, W, C)`` -> ``(B, T, sH, sW, C)``.
+        The flattened frame batch is padded up to its bucket and served in
+        one compiled call per bucket-sized chunk; padded outputs are
+        trimmed and only real frames count in :meth:`stats`.
+        """
+        arr = jnp.asarray(frames)
+        if arr.ndim == 3:
+            flat = arr[None]
+        elif arr.ndim == 4:
+            flat = arr
+        elif arr.ndim == 5:
+            flat = arr.reshape(arr.shape[0] * arr.shape[1], *arr.shape[2:])
+        else:
+            raise ValueError(
+                "expected (H, W, C), (T, H, W, C) or (B, T, H, W, C) frames, "
+                f"got shape {arr.shape}"
+            )
+        H, W, C = flat.shape[1:]
+        plan = self.plan_for((H, W, C))
+        hr = self._serve_flat(plan, flat)
+        if arr.ndim == 3:
+            return hr[0]
+        if arr.ndim == 5:
+            return hr.reshape(arr.shape[0], arr.shape[1], *plan.hr_shape)
+        return hr
+
+    def serve_batch(
+        self, plan: SRPlan, frames: jax.Array, real_frames: Optional[int] = None
+    ) -> jax.Array:
+        """Run ONE pre-bucketed batch through the plan's executor,
+        recording its steady-state latency (a cache miss compiles on a
+        dummy first, outside the timed region).  ``real_frames`` counts
+        only that many leading frames in :meth:`stats` — the rest are
+        padding; the full batch is returned.
+        """
+        n_real = frames.shape[0] if real_frames is None else real_frames
+        entry, _ = self.executor_for(plan, frames.shape[0], frames.dtype)
+        t0 = time.perf_counter()
+        hr = entry.fn(frames)
+        jax.block_until_ready(hr)
+        self._lat_ms.append((time.perf_counter() - t0) * 1e3)
+        self._frames += n_real
+        return hr
+
+    def _serve_flat(self, plan: SRPlan, flat: jax.Array) -> jax.Array:
+        N = flat.shape[0]
+        if N == 0:
+            return jnp.zeros(
+                (0, *plan.hr_shape), self.output_dtype(plan, flat.dtype)
+            )
+        bucket = self._bucket_for(N)
+        outs = []
+        for i in range(0, N, bucket):
+            chunk = flat[i : i + bucket]
+            n = chunk.shape[0]
+            if n < bucket:  # pad up to the compiled bucket, trim after
+                pad = jnp.zeros((bucket - n, *chunk.shape[1:]), chunk.dtype)
+                chunk = jnp.concatenate([chunk, pad], axis=0)
+            outs.append(self.serve_batch(plan, chunk, real_frames=n)[:n])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """Compile-cache counters plus per-entry compile metadata.
+
+        ``hits``/``misses``/``evictions`` are cumulative; ``entries`` lists
+        live entries in LRU -> MRU order, each with its plan shape, batch
+        bucket, serving dtype and measured compile seconds.
+        """
+        stats = self._cache.stats()
+        stats["entries"] = [
+            {
+                "lr_shape": list(e.plan.lr_shape),
+                "backend": e.plan.backend,
+                "precision": e.plan.precision,
+                "band_rows": e.plan.band_rows,
+                "bucket": e.bucket,
+                "dtype": e.dtype,
+                "compile_s": e.compile_s,
+            }
+            for e in self._cache.entries()
+        ]
+        return stats
+
+    def stats(self, **extra) -> StreamStats:
+        """Steady-state serving stats — compile time is never included
+        (compilation happens on a dummy inside the cache-miss path)."""
+        return latency_stats(self._lat_ms, self._frames, **extra)
+
+    def reset_stats(self) -> None:
+        self._lat_ms.clear()
+        self._frames = 0

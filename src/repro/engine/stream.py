@@ -1,19 +1,27 @@
-"""VideoStream — the serving driver over a compiled SR plan.
+"""VideoStream — DEPRECATED fixed-batch driver, now a shim over SRSession.
 
-Owns exactly one jitted executor (compiled during :meth:`warmup`, or lazily
-on the first batch) and feeds it fixed-size frame batches, recording
-wall-clock latency per call.  This is the paper's use case — real-time
-video SR — expressed as a service loop: compile once, then stream.
-Clips of arbitrary length are served by zero-padding the tail batch up to
-the compiled batch size (no recompilation) and trimming the output; only
-real frames count in the throughput stats.
+.. deprecated::
+    Use :class:`repro.engine.SRSession`: ``session.upscale(clip)`` replaces
+    ``stream.run``, ``session.stats()`` replaces ``stream.stats()``, and
+    compilation is handled by the session's plan cache (per serving dtype,
+    on a dummy batch — never counted in serving latency).  ``VideoStream``
+    remains for callers that hand-build an :class:`~repro.engine.SRPlan`
+    and want one pinned (plan, batch size) program; it wraps
+    ``SRSession.from_plan(plan, layers, bucket=batch_size)``.
 
-Used by ``examples/serve_sr.py`` and ``benchmarks/engine_throughput.py``.
+Semantics preserved from the original driver: ``process`` is strict about
+the batch size, ``run`` serves arbitrary-length clips by zero-padding the
+tail batch (no recompilation) and trimming the output, and only real
+frames count in the throughput stats.  One deliberate change rides on the
+session: compilation always happens on a warmup dummy in the dtype being
+served, so no ``process`` call's recorded latency ever includes a compile
+— previously a first batch in a non-fp32 dtype silently recompiled inside
+the timed region.
 """
 
 from __future__ import annotations
 
-import time
+import warnings
 from typing import List, Optional, Sequence
 
 import jax
@@ -21,14 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fusion import ConvLayer
-from repro.engine.executor import build_executor
 from repro.engine.plan import SRPlan
+from repro.engine.session import SRSession, StreamStats
 
 __all__ = ["VideoStream", "StreamStats"]
-
-
-class StreamStats(dict):
-    """Latency/throughput summary: frames, batches, fps, p50/p95/mean ms."""
 
 
 class VideoStream:
@@ -37,35 +41,64 @@ class VideoStream:
         plan: SRPlan,
         layers: Sequence[ConvLayer],
         batch_size: int = 1,
+        dtype=jnp.float32,
     ):
+        warnings.warn(
+            "VideoStream is deprecated; use repro.engine.SRSession "
+            "(session.upscale(clip) replaces stream.run — see the README "
+            "migration note)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if batch_size < 1:
             raise ValueError(f"batch_size={batch_size} must be >= 1")
         self.plan = plan
         self.batch_size = batch_size
-        self._fn = build_executor(plan, layers)
-        self._lat_ms: List[float] = []
-        self._frames = 0
-        self._compiled = False
+        # the dtype this stream is expected to serve: warmup compiles for
+        # it, so the first real batch in it never pays a compile
+        self.dtype = np.dtype(dtype)
+        self._session = SRSession.from_plan(plan, layers, bucket=batch_size)
+
+    @property
+    def session(self) -> SRSession:
+        """The underlying session (one pinned plan + bucket)."""
+        return self._session
+
+    # latency/frame counters live on the session (ONE stats pipeline);
+    # these aliases keep pre-session callers that reach into the stream's
+    # internals working
+    @property
+    def _lat_ms(self) -> List[float]:
+        return self._session._lat_ms
+
+    @property
+    def _frames(self) -> int:
+        return self._session._frames
+
+    @_frames.setter
+    def _frames(self, value: int) -> None:
+        self._session._frames = value
 
     # ------------------------------------------------------------------
     def warmup(self) -> float:
-        """Compile the executor on a zero batch; returns compile seconds."""
-        dummy = jnp.zeros((self.batch_size, *self.plan.lr_shape), jnp.float32)
-        t0 = time.perf_counter()
-        self._fn(dummy).block_until_ready()
-        self._compiled = True
-        return time.perf_counter() - t0
+        """Compile the executor for the serving dtype; returns compile
+        seconds (the cached figure if already compiled)."""
+        entry, _ = self._session.executor_for(
+            self.plan, self.batch_size, self.dtype
+        )
+        return entry.compile_s
 
     def process(
         self, frames: jax.Array, real_frames: Optional[int] = None
     ) -> jax.Array:
         """Run one batch (N, H, W, C) -> HR, recording its latency.
 
-        The batch size must match the stream's (one compiled program); the
-        first call compiles if :meth:`warmup` was skipped, and that call's
-        latency is excluded from the stats.  ``real_frames`` counts only
-        that many leading frames in the throughput stats (the rest are
-        padding, e.g. a clip's tail batch); the full batch is returned.
+        The batch size must match the stream's (one compiled program).
+        A batch in a dtype the session has not yet compiled for triggers
+        the compile on a dummy first — outside the recorded latency.
+        ``real_frames`` counts only that many leading frames in the
+        throughput stats (the rest are padding, e.g. a clip's tail
+        batch); the full batch is returned.
         """
         if frames.shape[0] != self.batch_size:
             raise ValueError(
@@ -76,16 +109,7 @@ class VideoStream:
             raise ValueError(
                 f"real_frames={n_real} outside [0, {self.batch_size}]"
             )
-        first = not self._compiled
-        t0 = time.perf_counter()
-        hr = self._fn(frames)
-        hr.block_until_ready()
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        self._compiled = True
-        if not first:
-            self._lat_ms.append(dt_ms)
-            self._frames += n_real
-        return hr
+        return self._session.serve_batch(self.plan, frames, real_frames=n_real)
 
     def run(self, frames: jax.Array) -> jax.Array:
         """Stream a clip (T, H, W, C) through in batch-size chunks.
@@ -96,39 +120,22 @@ class VideoStream:
         frames count in the latency stats.  Returns the (T, sH, sW, C) HR
         sequence.
         """
-        T = frames.shape[0]
-        if T == 0:
-            return jnp.zeros((0, *self.plan.hr_shape), frames.dtype)
-        outs = []
-        for i in range(0, T, self.batch_size):
-            chunk = frames[i : i + self.batch_size]
-            n = chunk.shape[0]
-            if n < self.batch_size:  # ragged tail: pad to the compiled batch
-                pad = jnp.zeros(
-                    (self.batch_size - n, *chunk.shape[1:]), chunk.dtype
-                )
-                chunk = jnp.concatenate([chunk, pad], axis=0)
-            outs.append(self.process(chunk, real_frames=n)[:n])
-        return jnp.concatenate(outs, axis=0)
+        if frames.ndim != 4:
+            raise ValueError(
+                f"expected a clip (T, H, W, C), got shape {frames.shape}"
+            )
+        # the pinned session's upscale does exactly this stream's chunk /
+        # tail-pad / trim / real-frame accounting (ONE implementation),
+        # including the empty-clip compiled-output-dtype path
+        return self._session.upscale(frames)
 
     # ------------------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """The pinned session's compile-cache counters."""
+        return self._session.cache_stats()
+
     def stats(self) -> StreamStats:
-        lat = np.asarray(self._lat_ms, dtype=np.float64)
-        if lat.size == 0:
-            return StreamStats(frames=0, batches=0, batch_size=self.batch_size,
-                               fps=0.0, p50_ms=0.0, p95_ms=0.0, mean_ms=0.0)
-        total_s = lat.sum() / 1e3
-        return StreamStats(
-            frames=self._frames,
-            batches=int(lat.size),
-            batch_size=self.batch_size,
-            # a clock too coarse to resolve the batch reports 0.0, not inf
-            fps=self._frames / total_s if total_s > 0 else 0.0,
-            p50_ms=float(np.percentile(lat, 50)),
-            p95_ms=float(np.percentile(lat, 95)),
-            mean_ms=float(lat.mean()),
-        )
+        return self._session.stats(batch_size=self.batch_size)
 
     def reset_stats(self) -> None:
-        self._lat_ms.clear()
-        self._frames = 0
+        self._session.reset_stats()

@@ -1,20 +1,29 @@
-"""Model registry: family -> unified model API.
+"""Model registry: LM families -> unified model API, SR models -> specs.
 
-Every family module exposes:
+LM side — every family module exposes:
   schema(cfg)                          parameter ParamSpec tree
   cache_schema(cfg, batch, max_len)    decode-cache ParamSpec tree
   loss(params, cfg, batch)             -> (scalar loss, metrics)
   prefill(params, cfg, batch, cache)   -> (last logits (B,V), cache)
   decode_step(params, cfg, tok, cache, pos) -> (logits (B,V), cache)
+
+SR side — a registered :class:`SRModelSpec` (canonical name, config, weight
+initialiser) is how ``repro.engine.SRSession.open("abpn_x3")`` resolves a
+model name into a servable conv stack without the caller touching plans or
+weights.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 import types
+from typing import Callable, Dict, Sequence, Tuple
 
 from repro.models import encdec, lm, mamba_lm, zamba
+from repro.models.abpn import ABPNConfig, init_abpn
 
-__all__ = ["get_model"]
+__all__ = ["get_model", "get_sr_model", "register_sr_model", "SRModelSpec"]
 
 _FAMILY = {
     "dense": lm,
@@ -33,3 +42,60 @@ def get_model(cfg) -> types.ModuleType:
         raise ValueError(
             f"unknown family {cfg.family!r}; expected one of {sorted(_FAMILY)}"
         ) from None
+
+
+# ----------------------------------------------------------------------
+# SR models (served through repro.engine.SRSession)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SRModelSpec:
+    """A servable SR model.
+
+    ``config`` carries at least ``scale`` and ``clip`` (the session's
+    epilogue defaults); ``init(key) -> Sequence[ConvLayer]`` produces the
+    weight stack (a trained stack can be passed to ``SRSession.open``
+    directly instead).
+    """
+
+    name: str
+    config: ABPNConfig
+    init: Callable[..., Sequence]
+
+
+_SR_MODELS: Dict[str, SRModelSpec] = {}
+
+
+def register_sr_model(
+    name: str,
+    config,
+    init: Callable[..., Sequence],
+    aliases: Tuple[str, ...] = (),
+) -> SRModelSpec:
+    """Register an SR model under ``name`` (plus aliases)."""
+    spec = SRModelSpec(name=name, config=config, init=init)
+    names = (name, *aliases)
+    taken = [n for n in names if n in _SR_MODELS]
+    if taken:  # reject up front — a failed call must not half-register
+        raise ValueError(f"SR model name(s) already registered: {taken}")
+    for n in names:
+        _SR_MODELS[n] = spec
+    return spec
+
+
+def get_sr_model(name: str) -> SRModelSpec:
+    try:
+        return _SR_MODELS[name]
+    except KeyError:
+        canonical = sorted({s.name for s in _SR_MODELS.values()})
+        raise ValueError(
+            f"unknown SR model {name!r}; available: {canonical}"
+        ) from None
+
+
+# The paper's model: ABPN x3 (same design point as configs/abpn_x3.py).
+register_sr_model(
+    "abpn_x3",
+    ABPNConfig(),
+    functools.partial(init_abpn, cfg=ABPNConfig()),
+    aliases=("abpn-x3", "abpn"),
+)
