@@ -1,0 +1,84 @@
+"""Validate BENCH_engine.json against the schema the repo commits to.
+
+CI's bench-smoke job regenerates a quick record and runs this against both
+the fresh output and the committed BENCH_engine.json, so schema drift
+(renamed/dropped keys, a missing pipelined-mode entry, a broken
+bit-exactness guarantee) fails the build instead of silently rotting the
+recorded numbers.
+
+    PYTHONPATH=src python benchmarks/check_bench_schema.py [path ...]
+
+No third-party schema library: the required key sets live next to the
+producer (``engine_throughput.RECORD_KEYS`` etc.), so adding a field means
+updating producer and checker in the same place.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from engine_throughput import (  # noqa: E402
+    BATCH_KEYS,
+    MODE_KEYS,
+    PIPELINE_KEYS,
+    RECORD_KEYS,
+    ROOFLINE_KEYS,
+)
+
+
+def _require(obj: dict, keys, where: str, errors: list) -> None:
+    missing = [k for k in keys if k not in obj]
+    if missing:
+        errors.append(f"{where}: missing keys {missing}")
+
+
+def check_record(rec: dict) -> list:
+    """All schema violations in one record (empty list = valid)."""
+    errors: list = []
+    _require(rec, RECORD_KEYS, "record", errors)
+    for bs, r in rec.get("batch", {}).items():
+        _require(r, BATCH_KEYS, f"batch[{bs}]", errors)
+    pipe = rec.get("pipeline", {})
+    _require(pipe, PIPELINE_KEYS, "pipeline", errors)
+    for mode in ("sync", "pipelined"):
+        _require(pipe.get(mode, {}), MODE_KEYS, f"pipeline.{mode}", errors)
+    _require(rec.get("roofline", {}), ROOFLINE_KEYS, "roofline", errors)
+    if pipe.get("bit_exact") is not True:
+        errors.append(
+            "pipeline.bit_exact must be true — pipelined serving changed "
+            "the output"
+        )
+    if pipe.get("chunks", 0) < 4:
+        errors.append(
+            "pipeline comparison must run on a >= 4-chunk clip "
+            f"(got chunks={pipe.get('chunks')})"
+        )
+    return errors
+
+
+def main(argv) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv[1:] or [os.path.join(root, "BENCH_engine.json")]
+    status = 0
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        errors = check_record(rec)
+        if errors:
+            status = 1
+            print(f"{path}: SCHEMA DRIFT")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"{path}: ok "
+                  f"(pipelined x{rec['pipeline']['speedup']} vs sync, "
+                  f"bit_exact={rec['pipeline']['bit_exact']})")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,13 +1,26 @@
-"""Engine serving throughput: frames/s, p50/p95 latency, compile cache.
+"""Engine serving throughput: frames/s, dispatch/complete latency, cache.
 
 The measurement the serving API exists for: batched requests stream
 through an ``SRSession``, whose plan cache compiles ONE executor per
-(plan, batch bucket, dtype) — so throughput scales with batch size and
-repeat requests are pure cache hits.  Records per-bucket compile time and
-the session's cache hit-rate alongside the latency stats.
+(plan, batch bucket, dtype) over a device-resident PreparedStack — so
+throughput scales with batch size and repeat requests are pure cache hits.
+
+Two serving modes are measured on the same multi-bucket clip:
+
+* ``sync``      — ``pipeline_depth=1``: every chunk blocks before the next
+  dispatches (the pre-pipeline serving path).
+* ``pipelined`` — ``pipeline_depth=2`` (double buffering): chunk *t+1* is
+  staged and dispatched while *t* computes; blocking happens only when the
+  pipeline is full and at the tail.
+
+Outputs are asserted bit-exact across modes, and the record carries the
+compiled executor's roofline terms (per-frame FLOPs / HBM bytes via
+``engine.plan_cost``) to tie serving throughput back to the paper's
+DRAM-traffic claim.
 
     PYTHONPATH=src python benchmarks/engine_throughput.py            # CSV rows
     PYTHONPATH=src python benchmarks/engine_throughput.py --json    # + BENCH_engine.json
+    PYTHONPATH=src python benchmarks/engine_throughput.py --quick   # CI smoke sizes
 
 Also exposes ``rows()`` for the ``benchmarks/run.py`` harness.
 """
@@ -21,41 +34,60 @@ import platform
 import time
 
 import jax
+import numpy as np
 
 from repro.data.synthetic import sr_pair_batch
-from repro.engine import SRSession, bucket_batch
+from repro.engine import SRSession, bucket_batch, plan_cost
 from repro.models.abpn import ABPNConfig, init_abpn
 
 DEFAULT_BATCHES = (1, 4, 8)
 
+# keys a BENCH_engine.json record must carry — checked by
+# benchmarks/check_bench_schema.py (CI fails on drift)
+RECORD_KEYS = (
+    "bench", "backend", "precision", "vertical_policy", "lr_shape",
+    "band_rows", "jax_backend", "platform", "batch", "cache", "pipeline",
+    "roofline",
+)
+BATCH_KEYS = (
+    "frames_per_s", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
+    "dispatch_mean_ms", "compile_s", "bucket", "batches",
+)
+PIPELINE_KEYS = (
+    "clip_frames", "bucket", "chunks", "depth", "reps", "bit_exact",
+    "sync", "pipelined", "speedup",
+)
+MODE_KEYS = (
+    "frames_per_s", "p50_ms", "p99_ms", "mean_ms", "dispatch_mean_ms",
+    "peak_inflight",
+)
+ROOFLINE_KEYS = (
+    "batch", "flops", "hbm_bytes", "flops_per_frame", "hbm_bytes_per_frame",
+    "weight_bytes_resident",
+)
 
-def measure(
-    *,
-    backend: str = "tilted",
-    precision: str = "fp32",
-    vertical_policy: str = "zero",
-    height: int = 120,
-    width: int = 64,
-    band_rows: int | None = None,
-    batch_sizes=DEFAULT_BATCHES,
-    reps: int = 4,
-) -> dict:
-    """Serve ``reps`` requests per batch size through one session; return
-    the stats per size plus the session's compile-cache record."""
-    cfg = ABPNConfig()
-    layers = init_abpn(jax.random.PRNGKey(0), cfg)
-    session = SRSession(
+
+def _session(layers, cfg, args_like) -> SRSession:
+    return SRSession(
         layers,
-        backend=backend,
-        precision=precision,
-        vertical_policy=vertical_policy,
-        band_rows=band_rows,
+        backend=args_like["backend"],
+        precision=args_like["precision"],
+        vertical_policy=args_like["vertical_policy"],
+        band_rows=args_like["band_rows"],
         scale=cfg.scale,
+        pipeline_depth=args_like.get("pipeline_depth", 2),
     )
+
+
+def measure_batches(layers, cfg, opts, batch_sizes, reps) -> tuple:
+    """Serve ``reps`` requests per batch size through one session; return
+    stats per size plus the session's compile-cache record."""
+    session = _session(layers, cfg, opts)
     results = {}
+    h, w = opts["height"], opts["width"]
     for bs in batch_sizes:
         session.reset_stats()
-        frames, _ = sr_pair_batch(0, bs * reps, lr_shape=(height, width),
+        frames, _ = sr_pair_batch(0, bs * reps, lr_shape=(h, w),
                                   scale=cfg.scale)
         for i in range(0, bs * reps, bs):
             session.upscale(frames[i : i + bs])
@@ -69,7 +101,9 @@ def measure(
             "frames_per_s": round(s["fps"], 2),
             "p50_ms": round(s["p50_ms"], 2),
             "p95_ms": round(s["p95_ms"], 2),
+            "p99_ms": round(s["p99_ms"], 2),
             "mean_ms": round(s["mean_ms"], 2),
+            "dispatch_mean_ms": round(s["dispatch_mean_ms"], 2),
             "compile_s": round(compile_s, 2),
             "bucket": bucket,
             "batches": s["batches"],
@@ -78,7 +112,82 @@ def measure(
     cache["hit_rate"] = round(cache["hit_rate"], 4)
     for e in cache["entries"]:
         e["compile_s"] = round(e["compile_s"], 2)
-    plan = session.plan_for((height, width, cfg.in_channels))
+    for st in cache["stacks"]:
+        st["prepare_s"] = round(st["prepare_s"], 4)
+    return results, cache
+
+
+def measure_pipeline(layers, cfg, opts, *, bucket, chunks, reps) -> dict:
+    """One ``chunks * bucket``-frame clip served end-to-end in sync
+    (depth 1) vs pipelined (depth 2) mode; steady-state fps over ``reps``
+    passes, outputs checked bit-exact."""
+    h, w = opts["height"], opts["width"]
+    n = bucket * chunks
+    clip, _ = sr_pair_batch(1, n, lr_shape=(h, w), scale=cfg.scale)
+    modes = (("sync", 1), ("pipelined", 2))
+    out = {"clip_frames": n, "bucket": bucket, "chunks": chunks,
+           "depth": dict(modes)["pipelined"], "reps": reps}
+    results = {}
+    for mode, depth in modes:
+        session = _session(layers, cfg, {**opts, "pipeline_depth": depth})
+        session.max_bucket = bucket
+        hr = session.upscale(clip)  # compile pass (outside the stats)
+        session.reset_stats()
+        for _ in range(reps):
+            hr = session.upscale(clip)
+        s = session.stats()
+        results[mode] = hr
+        out[mode] = {
+            "frames_per_s": round(s["fps"], 2),
+            "p50_ms": round(s["p50_ms"], 2),
+            "p99_ms": round(s["p99_ms"], 2),
+            "mean_ms": round(s["mean_ms"], 2),
+            "dispatch_mean_ms": round(s["dispatch_mean_ms"], 2),
+            "peak_inflight": s["peak_inflight"],
+        }
+    out["bit_exact"] = bool(
+        np.array_equal(np.asarray(results["sync"]),
+                       np.asarray(results["pipelined"]))
+    )
+    out["speedup"] = round(
+        out["pipelined"]["frames_per_s"] / max(out["sync"]["frames_per_s"], 1e-9),
+        3,
+    )
+    return out
+
+
+def measure(
+    *,
+    backend: str = "tilted",
+    precision: str = "fp32",
+    vertical_policy: str = "zero",
+    height: int = 120,
+    width: int = 64,
+    band_rows: int | None = None,
+    batch_sizes=DEFAULT_BATCHES,
+    reps: int = 4,
+    pipe_bucket: int = 4,
+    pipe_chunks: int = 4,
+) -> dict:
+    """The full benchmark record: per-batch-size stats, the pipelined-vs-
+    sync clip comparison, and the compiled executor's roofline terms."""
+    cfg = ABPNConfig()
+    layers = init_abpn(jax.random.PRNGKey(0), cfg)
+    opts = {
+        "backend": backend,
+        "precision": precision,
+        "vertical_policy": vertical_policy,
+        "height": height,
+        "width": width,
+        "band_rows": band_rows,
+    }
+    batch, cache = measure_batches(layers, cfg, opts, batch_sizes, reps)
+    pipeline = measure_pipeline(
+        layers, cfg, opts, bucket=pipe_bucket, chunks=pipe_chunks, reps=reps
+    )
+    probe = _session(layers, cfg, opts)
+    plan = probe.plan_for((height, width, cfg.in_channels))
+    roofline = plan_cost(plan, layers, pipe_bucket)
     return {
         "bench": "engine_throughput",
         "backend": backend,
@@ -88,21 +197,28 @@ def measure(
         "band_rows": plan.band_rows,
         "jax_backend": jax.default_backend(),
         "platform": platform.platform(),
-        "batch": results,
+        "batch": batch,
         "cache": cache,
+        "pipeline": pipeline,
+        "roofline": roofline,
     }
 
 
 def rows():
     """Harness rows (kept small: batch 1 and 4, few reps)."""
     t0 = time.perf_counter()
-    rec = measure(batch_sizes=(1, 4), reps=3)
+    rec = measure(batch_sizes=(1, 4), reps=3, pipe_bucket=2, pipe_chunks=4)
     us = (time.perf_counter() - t0) * 1e6
     out = []
     for bs, r in rec["batch"].items():
         out.append((f"engine.throughput.b{bs}", us,
                     f"{r['frames_per_s']:.1f} frames/s, p50 {r['p50_ms']:.1f} ms "
                     f"({rec['backend']}/{rec['precision']})"))
+    p = rec["pipeline"]
+    out.append(("engine.pipeline.speedup", us,
+                f"pipelined {p['pipelined']['frames_per_s']:.1f} vs sync "
+                f"{p['sync']['frames_per_s']:.1f} frames/s "
+                f"(x{p['speedup']:.2f}, bit_exact={p['bit_exact']})"))
     c = rec["cache"]
     out.append(("engine.plan_cache", us,
                 f"{c['misses']} compiles, hit rate {c['hit_rate']:.2f}"))
@@ -113,6 +229,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_engine.json next to this script's repo root")
+    ap.add_argument("--json-path", default=None,
+                    help="explicit output path for the JSON record")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes: tiny shapes, 2 batch sizes, 2 reps")
     ap.add_argument("--backend", default="tilted",
                     choices=["reference", "tilted", "kernel"])
     ap.add_argument("--precision", default="fp32",
@@ -126,25 +246,50 @@ def main():
                     help="band height (default: derived from --height)")
     ap.add_argument("--reps", type=int, default=4)
     ap.add_argument("--batches", type=int, nargs="+", default=list(DEFAULT_BATCHES))
+    ap.add_argument("--pipe-bucket", type=int, default=4,
+                    help="chunk size of the pipelined-vs-sync clip")
+    ap.add_argument("--pipe-chunks", type=int, default=4,
+                    help="chunks in the pipelined-vs-sync clip (>= 4 shows "
+                         "steady-state overlap)")
     args = ap.parse_args()
 
-    rec = measure(backend=args.backend, precision=args.precision,
-                  vertical_policy=args.policy,
-                  height=args.height, width=args.width,
-                  band_rows=args.band_rows,
-                  batch_sizes=tuple(args.batches), reps=args.reps)
+    kw = dict(backend=args.backend, precision=args.precision,
+              vertical_policy=args.policy,
+              height=args.height, width=args.width,
+              band_rows=args.band_rows,
+              batch_sizes=tuple(args.batches), reps=args.reps,
+              pipe_bucket=args.pipe_bucket, pipe_chunks=args.pipe_chunks)
+    if args.quick:
+        kw.update(height=24, width=16, batch_sizes=(1, 2), reps=2,
+                  pipe_bucket=2, pipe_chunks=4)
+    rec = measure(**kw)
     print("name,us_per_call,derived")
     for bs, r in rec["batch"].items():
         print(f'engine.throughput.b{bs},{r["mean_ms"] * 1e3:.1f},'
               f'"{r["frames_per_s"]:.1f} frames/s p50 {r["p50_ms"]:.1f} ms '
-              f'p95 {r["p95_ms"]:.1f} ms (bucket {r["bucket"]}, '
+              f'p99 {r["p99_ms"]:.1f} ms (bucket {r["bucket"]}, '
               f'compile {r["compile_s"]:.2f}s)"')
+    p = rec["pipeline"]
+    print(f'engine.pipeline.sync,{p["sync"]["mean_ms"] * 1e3:.1f},'
+          f'"{p["sync"]["frames_per_s"]:.1f} frames/s on '
+          f'{p["chunks"]}x{p["bucket"]} clip"')
+    print(f'engine.pipeline.pipelined,{p["pipelined"]["mean_ms"] * 1e3:.1f},'
+          f'"{p["pipelined"]["frames_per_s"]:.1f} frames/s '
+          f'(x{p["speedup"]:.2f} vs sync, bit_exact={p["bit_exact"]})"')
+    r = rec["roofline"]
+    print(f'engine.roofline.b{r["batch"]},0.0,'
+          f'"{r["hbm_bytes_per_frame"] / 1e6:.2f} MB HBM/frame, '
+          f'{r["flops_per_frame"] / 1e9:.2f} GFLOP/frame, '
+          f'{r["weight_bytes_resident"] / 1e3:.1f} kB weights resident"')
     c = rec["cache"]
     print(f'engine.plan_cache,0.0,"{c["misses"]} compiles {c["hits"]} hits '
           f'hit rate {c["hit_rate"]:.2f}"')
-    if args.json:
-        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        path = os.path.join(root, "BENCH_engine.json")
+    if args.json or args.json_path:
+        if args.json_path:
+            path = args.json_path
+        else:
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            path = os.path.join(root, "BENCH_engine.json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--policy", default="zero",
                     choices=["zero", "halo", "replicate"],
                     help="vertical band boundary policy (all backends)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="chunks in flight per request (1 = blocking, "
+                         "2 = double-buffered dispatch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -43,6 +46,7 @@ def main():
         backend=args.backend,
         precision=args.precision,
         vertical_policy=args.policy,
+        pipeline_depth=args.pipeline_depth,
         seed=args.seed,
     )
 
@@ -72,8 +76,10 @@ def main():
     print(f"served {s['frames']} frames over {s['batches']} requests "
           f"({args.height}x{args.width} -> {plan.hr_shape[0]}x{plan.hr_shape[1]}, "
           f"plus a {h2}x{w2} request)")
-    print(f"throughput {s['fps']:.1f} frames/s  latency p50 {s['p50_ms']:.1f} ms  "
-          f"p95 {s['p95_ms']:.1f} ms ({jax.default_backend()} backend)")
+    print(f"throughput {s['fps']:.1f} frames/s  complete p50 {s['p50_ms']:.1f} ms  "
+          f"p99 {s['p99_ms']:.1f} ms  dispatch p50 {s['dispatch_p50_ms']:.2f} ms  "
+          f"(depth {args.pipeline_depth}, peak in-flight {s['peak_inflight']}, "
+          f"{jax.default_backend()} backend)")
     print(f"plan cache: {c['misses']} compiles, {c['hits']} hits, "
           f"hit rate {c['hit_rate']:.2f}; buckets "
           f"{[(tuple(e['lr_shape'][:2]), e['bucket'], round(e['compile_s'], 2)) for e in c['entries']]}")

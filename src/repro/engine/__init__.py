@@ -5,7 +5,11 @@ resolves weights through the model registry, ``session.upscale(frames)``
 serves any ``(H, W, C)`` / ``(T, H, W, C)`` / ``(B, T, H, W, C)`` request —
 deriving the :class:`SRPlan` per resolution (``SRPlan.from_request``),
 bucketing batches to powers of two, and compiling executors on demand into
-an LRU :class:`PlanCache` (``session.cache_stats()``).
+an LRU :class:`PlanCache` (``session.cache_stats()``).  Serving is
+pipelined: weights are prepared once per session into a device-resident
+:class:`PreparedStack`, multi-bucket requests keep up to ``pipeline_depth``
+chunks in flight (double-buffered dispatch), and executors can donate the
+frame slab back to XLA (``donate_frames``).
 
 Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
 numerics, boundary policy, backend — and ``build_executor``/``run``
@@ -16,9 +20,13 @@ over ``run``.
 """
 
 from repro.engine.executor import (
+    PreparedStack,
     build_executor,
+    build_stack_executor,
     output_spec,
+    plan_cost,
     prepare_layers,
+    prepare_stack,
     run,
     sr_features,
 )
@@ -44,8 +52,12 @@ __all__ = [
     "PRECISIONS",
     "VERTICAL_POLICIES",
     "build_executor",
+    "build_stack_executor",
     "output_spec",
+    "plan_cost",
     "prepare_layers",
+    "prepare_stack",
+    "PreparedStack",
     "run",
     "sr_features",
     "VideoStream",

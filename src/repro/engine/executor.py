@@ -16,12 +16,26 @@ per-band Python loop in ``core.fusion.run_banded``:
 
 All backends share the anchor + pixel-shuffle epilogue and the plan's
 numerics policy (fp32 / bf16 / int8 dequant-on-read weights).
+
+Weight preparation (the numerics policy + the kernel's pad/pack) has two
+homes:
+
+* :func:`prepare_stack` builds a device-resident :class:`PreparedStack`
+  ONCE per weight stack; :func:`build_stack_executor` compiles a serving
+  executor that takes the stack as a plain pytree argument — so the int8
+  quantise round-trip and the kernel's weight scatter never execute inside
+  the per-batch jitted call.  This is what ``SRSession`` serves through.
+* :func:`run`/:func:`build_executor` keep the self-contained signature
+  (raw float layers in, preparation traced into the call) — the
+  differentiable path QAT training uses, and the oracle the prepared path
+  is tested bit-exact against.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +53,17 @@ from repro.engine.plan import SRPlan
 # tested pixel-shuffle/anchor convention can be shared without a cycle.
 from repro.models.abpn import depth_to_space, make_anchor
 
-__all__ = ["prepare_layers", "build_executor", "output_spec", "run", "sr_features"]
-
+__all__ = [
+    "prepare_layers",
+    "prepare_stack",
+    "PreparedStack",
+    "build_executor",
+    "build_stack_executor",
+    "output_spec",
+    "plan_cost",
+    "run",
+    "sr_features",
+]
 
 def prepare_layers(layers: Sequence[ConvLayer], precision: str) -> List[ConvLayer]:
     """Apply the plan's numerics policy to a float conv stack.
@@ -62,6 +85,70 @@ def prepare_layers(layers: Sequence[ConvLayer], precision: str) -> List[ConvLaye
     if precision == "int8":
         return dequantize_layers(quantize_layers(layers))
     raise ValueError(f"unknown precision {precision!r}")
+
+
+@dataclasses.dataclass
+class PreparedStack:
+    """A weight stack with the plan's numerics + backend packing applied.
+
+    Built ONCE per (weight stack, precision, backend) by
+    :func:`prepare_stack`; the arrays are ordinary device-resident
+    ``jax.Array``s, and the whole object is a pytree, so a jitted executor
+    takes it as a plain argument — weight preparation never re-executes
+    inside the per-batch call.  ``packed`` is only populated for the
+    ``kernel`` backend (the Pallas launch's padded storage form).
+    """
+
+    layers: tuple  # Tuple[ConvLayer, ...], numerics applied
+    packed: Optional[object]  # kernels.ops.PackedLayers | None
+    precision: str
+    backend: str
+
+    def nbytes(self) -> int:
+        """Device bytes this stack holds (prepared + packed forms)."""
+        return sum(
+            leaf.nbytes
+            for leaf in jax.tree_util.tree_leaves((self.layers, self.packed))
+            if hasattr(leaf, "nbytes")
+        )
+
+
+jax.tree_util.register_dataclass(
+    PreparedStack,
+    data_fields=["layers", "packed"],
+    meta_fields=["precision", "backend"],
+)
+
+
+def compute_dtype_for(precision: str):
+    """The on-chip compute dtype a precision policy implies (int8 stores
+    quantised weights but computes dequantised in fp32)."""
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+
+def prepare_stack(plan: SRPlan, layers: Sequence[ConvLayer]) -> PreparedStack:
+    """Apply ``plan``'s numerics policy — and, for the ``kernel`` backend,
+    the launch's weight pad/pack — producing a device-resident
+    :class:`PreparedStack`.
+
+    Called eagerly this executes the int8 quantise round-trip / bf16 cast /
+    kernel pack exactly once; the returned arrays are then reused by every
+    batch served through :func:`build_stack_executor`.  The function is
+    pure jnp, so it also traces cleanly when invoked inside a jit (the
+    legacy self-contained path) or under ``grad`` (QAT).
+    """
+    prepared = tuple(prepare_layers(layers, plan.precision))
+    packed = None
+    if plan.backend == "kernel":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        packed = ops.pack_stack(prepared, dtype=compute_dtype_for(plan.precision))
+    return PreparedStack(
+        layers=prepared,
+        packed=packed,
+        precision=plan.precision,
+        backend=plan.backend,
+    )
 
 
 # ----------------------------------------------------------------------
@@ -102,14 +189,17 @@ def _features_tilted(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
     return out.reshape(N, H, W, out.shape[-1])
 
 
-def _features_kernel(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
+def _features_kernel(
+    plan: SRPlan, layers, frames: jax.Array, packed=None
+) -> jax.Array:
     from repro.kernels import ops  # local import: kernels are optional
 
     # The kernel covers the full plan space: zero/replicate run the bands
     # directly with the matching in-kernel row padding, halo marshals
     # (R+2L)-row slabs with per-band valid-row bounds, and bf16 plans
     # compute in bf16 on-chip (frames arrive already cast, so the compute
-    # dtype rides in on the input dtype).
+    # dtype rides in on the input dtype).  ``packed`` (from a
+    # PreparedStack) skips the per-call weight pad/scatter.
     return ops.tilted_fused_frames(
         frames,
         layers,
@@ -117,19 +207,51 @@ def _features_kernel(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
         tile_cols=plan.tile_cols,
         vertical_policy=plan.vertical_policy,
         compute_dtype=frames.dtype,
+        packed=packed,
     )
 
 
 _BACKENDS = {
     "reference": _features_reference,
     "tilted": _features_tilted,
-    "kernel": _features_kernel,
 }
 
 
-def sr_features(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
-    """Run the plan's conv-stack backend over a frame batch (no epilogue)."""
+def sr_features(plan: SRPlan, layers, frames: jax.Array, packed=None) -> jax.Array:
+    """Run the plan's conv-stack backend over a frame batch (no epilogue).
+
+    ``layers`` are assumed already numerics-prepared; ``packed`` (kernel
+    backend only) supplies pre-packed launch weights.
+    """
+    if plan.backend == "kernel":
+        return _features_kernel(plan, layers, frames, packed)
     return _BACKENDS[plan.backend](plan, layers, frames)
+
+
+def _execute_stack(
+    plan: SRPlan, stack: PreparedStack, frames: jax.Array
+) -> jax.Array:
+    """The per-batch computation over an already-prepared weight stack.
+
+    This is what serving compiles: weight preparation happened when the
+    :class:`PreparedStack` was built, so the jitted program contains ONLY
+    the conv datapath + epilogue — no quantise round-trip, no kernel weight
+    scatter (asserted by the jaxpr test in ``tests/test_pipeline.py``).
+    """
+    if frames.ndim != 4:
+        raise ValueError(
+            f"expected a frame batch (N, H, W, C), got shape {frames.shape}"
+        )
+    in_dtype = frames.dtype
+    x = frames.astype(compute_dtype_for(plan.precision))
+    feats = sr_features(plan, stack.layers, x, packed=stack.packed)
+    # ABPN's residual anchor (nearest-neighbour upsample after the shuffle);
+    # make_anchor broadcasts over the frames axis, depth_to_space is vmapped.
+    out = feats + make_anchor(x, plan.scale)
+    hr = jax.vmap(lambda o: depth_to_space(o, plan.scale))(out)
+    if plan.clip:
+        hr = jnp.clip(hr, 0.0, 1.0)
+    return hr.astype(in_dtype)
 
 
 def _execute(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
@@ -138,24 +260,12 @@ def _execute(plan: SRPlan, layers, frames: jax.Array) -> jax.Array:
     Layers are a pytree ARGUMENT (not a closure), so this traces cleanly
     under ``grad``/``vmap`` (e.g. the QAT training example differentiates
     through it) and one jit cache entry serves every weight stack of the
-    same structure.
+    same structure.  Weight preparation is traced INTO the call here — the
+    serving path avoids that via :func:`prepare_stack` +
+    :func:`build_stack_executor`, which produce bit-identical results (the
+    same preparation ops run on the same values, merely outside the jit).
     """
-    if frames.ndim != 4:
-        raise ValueError(
-            f"expected a frame batch (N, H, W, C), got shape {frames.shape}"
-        )
-    in_dtype = frames.dtype
-    compute_dtype = jnp.bfloat16 if plan.precision == "bf16" else jnp.float32
-    prepared = prepare_layers(layers, plan.precision)
-    x = frames.astype(compute_dtype)
-    feats = sr_features(plan, prepared, x)
-    # ABPN's residual anchor (nearest-neighbour upsample after the shuffle);
-    # make_anchor broadcasts over the frames axis, depth_to_space is vmapped.
-    out = feats + make_anchor(x, plan.scale)
-    hr = jax.vmap(lambda o: depth_to_space(o, plan.scale))(out)
-    if plan.clip:
-        hr = jnp.clip(hr, 0.0, 1.0)
-    return hr.astype(in_dtype)
+    return _execute_stack(plan, prepare_stack(plan, layers), frames)
 
 
 # SRPlan is frozen/hashable -> static; layers/frames are pytree args, so the
@@ -191,6 +301,70 @@ def build_executor(
     else:
         fn = jax.jit(_execute, static_argnums=0)
     return functools.partial(fn, plan, bound)
+
+
+def build_stack_executor(
+    plan: SRPlan,
+    stack: PreparedStack,
+    *,
+    donate_frames: bool = False,
+) -> Callable[[jax.Array], jax.Array]:
+    """The serving executor: bind plan + a :class:`PreparedStack` into
+    ``frames (N,H,W,C) -> HR (N,sH,sW,C)``.
+
+    The stack rides in as a pytree argument on every call (device-resident
+    arrays — dispatch cost only), so the compiled program contains no
+    weight preparation.  ``donate_frames=True`` compiles with the frame
+    batch donated (``donate_argnums``): XLA may reuse the bucket-sized
+    slab's memory for same-sized intermediates (e.g. the compute-dtype
+    cast of the frames) and releases it at its last use instead of
+    pinning it for the whole call — note the HR output itself is
+    ``scale^2`` x larger than the input, so for ``scale > 1`` the output
+    buffer never aliases the donated slab.  Callers must treat the input
+    array as CONSUMED.  The executor gets its own jit
+    wrapper (same lifetime rationale as ``build_executor(shared_jit=False)``:
+    evicting the cache entry drops the program), exposed as ``.jitted`` on
+    the returned callable so tests can assert its trace count.
+    """
+    plan.check_invariants()
+    donate = (2,) if donate_frames else ()
+    jitted = jax.jit(_execute_stack, static_argnums=0, donate_argnums=donate)
+    fn = functools.partial(jitted, plan, stack)
+    fn.jitted = jitted
+    fn.donates_frames = donate_frames
+    return fn
+
+
+def plan_cost(
+    plan: SRPlan,
+    layers: Sequence[ConvLayer],
+    batch: int,
+    dtype=jnp.float32,
+) -> dict:
+    """Roofline terms of the compiled serving executor for one bucket.
+
+    Lowers + compiles ``_execute_stack`` for ``(batch, *lr_shape)`` input
+    and walks the HLO (``roofline.hlo_parse``) for per-call FLOPs and HBM
+    bytes — the software analogue of the paper's DRAM-traffic accounting,
+    reported per frame alongside the weight bytes the PreparedStack keeps
+    resident (the traffic weight hoisting removes from every batch).
+    """
+    from repro.roofline.hlo_parse import parse_hlo
+
+    stack = prepare_stack(plan, layers)
+    jitted = jax.jit(_execute_stack, static_argnums=0)
+    lowered = jitted.lower(
+        plan, stack, jax.ShapeDtypeStruct((batch, *plan.lr_shape), dtype)
+    )
+    cost = parse_hlo(lowered.compile().as_text())
+    return {
+        "batch": int(batch),
+        "flops": int(cost.flops),
+        "hbm_bytes": int(cost.hbm_bytes),
+        "flops_per_frame": int(cost.flops // batch),
+        "hbm_bytes_per_frame": int(cost.hbm_bytes // batch),
+        "weight_bytes_resident": int(stack.nbytes()),
+    }
 
 
 def output_spec(

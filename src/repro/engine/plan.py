@@ -152,6 +152,15 @@ class SRPlan:
     def hr_shape(self) -> Tuple[int, int, int]:
         return (self.height * self.scale, self.width * self.scale, self.in_channels)
 
+    @property
+    def stack_key(self) -> Tuple[str, str]:
+        """Key of the device-resident prepared weight stack this plan's
+        executor consumes.  Weight preparation (numerics policy + kernel
+        packing) depends only on ``(precision, backend)`` — NOT on frame
+        geometry, bucket or serving dtype — so every resolution/bucket a
+        session serves shares one ``PreparedStack`` under this key."""
+        return (self.precision, self.backend)
+
     def check_invariants(self) -> None:
         """Validate the full plan: field constraints ran in ``__post_init__``;
         this additionally asserts the tilted schedule's hand-off invariants

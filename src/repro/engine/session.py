@@ -17,27 +17,61 @@ absorbs that heterogeneity:
   counters and per-entry compile times are exposed via
   :meth:`SRSession.cache_stats`.
 
+Serving is PIPELINED — the software analogue of the paper's ping-pong
+line buffers:
+
+* Weights are prepared (quantised / cast / kernel-packed) ONCE per session
+  into a device-resident :class:`~repro.engine.executor.PreparedStack`
+  (refcounted across cache entries, released when the last entry using it
+  is evicted), so no per-batch jitted call re-runs weight prep.
+* Multi-bucket requests dispatch up to ``pipeline_depth`` chunks
+  asynchronously (depth 2 by default — double buffering): while the device
+  computes chunk *t*, chunk *t+1* is staged (``jax.device_put`` for host
+  frames, one reused tail-padding buffer) and enqueued; blocking happens
+  only when the pipeline is full and at the tail.
+* ``donate_frames`` compiles executors with the frame batch donated, so
+  XLA can recycle the bucket-sized slab for same-sized intermediates and
+  release it at its last use instead of pinning it for the whole call —
+  the HR output is ``scale^2`` x larger, so it never aliases the input
+  (auto: on for accelerator backends, off on CPU where XLA does not
+  implement donation).
+  Donated inputs are CONSUMED — ``upscale`` only ever donates slabs the
+  session itself staged; arrays passed straight to :meth:`serve_batch` are
+  consumed when donation is on.
+
+Stats split DISPATCH latency (time to enqueue a chunk) from COMPLETE
+latency (dispatch -> result ready); throughput is computed over the
+serving wall-clock span, so steady-state fps reflects the overlap.  A
+synchronous caller (:meth:`serve_batch`) records identical dispatch and
+complete values.
+
 Compilation always happens on a zero dummy **in the dtype being served**,
 inside the cache-miss path — so steady-state latency stats
 (:meth:`SRSession.stats`) never include compile time, and a first batch in
 a new dtype never pays a silent mid-serving compile.
 
 ``VideoStream`` (stream.py) is now a deprecated shim over a session pinned
-to one plan and one bucket.
+to one plan, one bucket and ``pipeline_depth=1`` (the legacy blocking
+behavior).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.executor import build_executor, output_spec
+from repro.engine.executor import (
+    PreparedStack,
+    build_stack_executor,
+    output_spec,
+    prepare_stack,
+)
 from repro.engine.plan import (
     PREFERRED_BAND_ROWS,
     SRPlan,
@@ -53,26 +87,56 @@ __all__ = [
 
 
 class StreamStats(dict):
-    """Latency/throughput summary: frames, batches, fps, p50/p95/mean ms."""
+    """Latency/throughput summary: frames, batches, fps, dispatch/complete
+    p50/p95/p99/mean ms."""
 
 
-def latency_stats(lat_ms: Sequence[float], frames: int, **extra) -> StreamStats:
+def latency_stats(
+    lat_ms: Sequence[float],
+    frames: int,
+    *,
+    dispatch_ms: Optional[Sequence[float]] = None,
+    total_s: Optional[float] = None,
+    **extra,
+) -> StreamStats:
     """Summarise recorded per-call latencies (compile time never included).
 
-    A clock too coarse to resolve any call reports ``fps=0.0``, not inf.
+    ``lat_ms`` are COMPLETE latencies (dispatch -> result ready); the
+    headline percentiles (``p50_ms``/``p95_ms``/``p99_ms``/``mean_ms``)
+    come from them.  ``dispatch_ms`` (enqueue time only) populates the
+    ``dispatch_*`` keys — for a synchronous caller both series are the
+    same list, so the values are identical.  ``total_s`` is the serving
+    wall-clock span: with pipelining, completes overlap, so fps is frames
+    over the SPAN, not over the sum of latencies.  A clock too coarse to
+    resolve any call reports ``fps=0.0``, not inf.
     """
     lat = np.asarray(lat_ms, dtype=np.float64)
+    disp = lat if dispatch_ms is None else np.asarray(dispatch_ms, np.float64)
     if lat.size == 0:
-        return StreamStats(frames=0, batches=0, fps=0.0,
-                           p50_ms=0.0, p95_ms=0.0, mean_ms=0.0, **extra)
-    total_s = lat.sum() / 1e3
+        return StreamStats(
+            frames=0, batches=0, fps=0.0,
+            p50_ms=0.0, p95_ms=0.0, p99_ms=0.0, mean_ms=0.0,
+            dispatch_p50_ms=0.0, dispatch_p99_ms=0.0, dispatch_mean_ms=0.0,
+            **extra,
+        )
+    total = lat.sum() / 1e3 if total_s is None else float(total_s)
+    if disp.size == 0:
+        d50 = d99 = dmean = 0.0
+    else:
+        d50 = float(np.percentile(disp, 50))
+        d99 = float(np.percentile(disp, 99))
+        dmean = float(disp.mean())
     return StreamStats(
         frames=frames,
         batches=int(lat.size),
-        fps=frames / total_s if total_s > 0 else 0.0,
+        fps=frames / total if total > 0 else 0.0,
         p50_ms=float(np.percentile(lat, 50)),
         p95_ms=float(np.percentile(lat, 95)),
+        p99_ms=float(np.percentile(lat, 99)),
         mean_ms=float(lat.mean()),
+        dispatch_p50_ms=d50,
+        dispatch_p99_ms=d99,
+        dispatch_mean_ms=dmean,
         **extra,
     )
 
@@ -99,6 +163,13 @@ class _CacheEntry:
     bucket: int
     dtype: str
     compile_s: float
+    stack_key: tuple = ()
+    donates: bool = False
+
+    @property
+    def jitted(self):
+        """The executor's own jit wrapper (trace-count introspection)."""
+        return getattr(self.fn, "jitted", None)
 
 
 class PlanCache:
@@ -107,12 +178,17 @@ class PlanCache:
     ``get`` counts a hit (and refreshes recency) or a miss; ``put`` evicts
     the least-recently-used entry past ``capacity`` and counts the
     eviction.  Counters are cumulative over the cache's lifetime.
+    ``on_evict(key, entry)`` fires for every evicted entry (including
+    :meth:`clear`), so the owner can release per-entry resources — the
+    session uses it to drop the evicted executor's reference on the
+    device-resident :class:`~repro.engine.executor.PreparedStack`.
     """
 
-    def __init__(self, capacity: int = 8):
+    def __init__(self, capacity: int = 8, on_evict: Optional[Callable] = None):
         if capacity < 1:
             raise ValueError(f"capacity={capacity} must be >= 1")
         self.capacity = capacity
+        self.on_evict = on_evict
         self._entries: "OrderedDict[tuple, _CacheEntry]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -127,12 +203,22 @@ class PlanCache:
         self.hits += 1
         return entry
 
+    def _evict_oldest(self) -> None:
+        k, e = self._entries.popitem(last=False)
+        self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(k, e)
+
     def put(self, key, entry: _CacheEntry) -> None:
         self._entries[key] = entry
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+            self._evict_oldest()
+
+    def clear(self) -> None:
+        """Evict every entry (counted, ``on_evict`` fired per entry)."""
+        while self._entries:
+            self._evict_oldest()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -160,6 +246,15 @@ class PlanCache:
         }
 
 
+@dataclasses.dataclass
+class _StackRecord:
+    """A refcounted device-resident PreparedStack shared by cache entries."""
+
+    stack: PreparedStack
+    refs: int
+    prepare_s: float
+
+
 class SRSession:
     """One serving endpoint: fixed weights + policy, any request shape.
 
@@ -183,12 +278,16 @@ class SRSession:
         cache_capacity: int = 8,
         max_bucket: Optional[int] = None,
         model: Optional[str] = None,
+        pipeline_depth: int = 2,
+        donate_frames: Optional[bool] = None,
     ):
         layers = tuple(layers)
         if not layers:
             raise ValueError("layer stack is empty")
         if max_bucket is not None and max_bucket < 1:
             raise ValueError(f"max_bucket={max_bucket} must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth={pipeline_depth} must be >= 1")
         self.layers = layers
         self.model = model
         self.backend = backend
@@ -200,7 +299,20 @@ class SRSession:
         self.scale = scale
         self.clip = clip
         self.max_bucket = max_bucket
-        self._cache = PlanCache(cache_capacity)
+        # pipeline_depth bounds in-flight chunks per request: 1 = blocking
+        # (complete t before dispatching t+1), 2 = double buffering (the
+        # paper's ping-pong line buffers), deeper = more latency hiding at
+        # the cost of holding more bucket-sized slabs live.
+        self.pipeline_depth = pipeline_depth
+        # donate_frames=None resolves per-backend at first executor build:
+        # XLA implements input-output aliasing on accelerators but not CPU
+        # (donating there just warns and copies).
+        self.donate_frames = donate_frames
+        self._cache = PlanCache(cache_capacity, on_evict=self._on_evict)
+        # device-resident prepared weights, refcounted by live cache
+        # entries — prepared ONCE per (precision, backend), dropped when
+        # the last entry using them is evicted (no weight leak)
+        self._stacks: Dict[tuple, _StackRecord] = {}
         # derived-plan / output-dtype memos; bounded like the executor
         # cache so a long-lived endpoint under arbitrarily diverse
         # resolutions cannot grow memory monotonically
@@ -209,8 +321,14 @@ class SRSession:
         self._out_dtypes: Dict[tuple, np.dtype] = {}
         self._pinned: Optional[SRPlan] = None
         self._pinned_bucket: Optional[int] = None
-        self._lat_ms: List[float] = []
+        # one host-side staging buffer, reused across ragged tails (keyed
+        # by (bucket, frame shape, dtype) — replaced when the shape moves)
+        self._staging: Optional[Tuple[tuple, np.ndarray]] = None
+        self._dispatch_ms: List[float] = []
+        self._complete_ms: List[float] = []
+        self._span_s = 0.0
         self._frames = 0
+        self._peak_inflight = 0
 
     # ------------------------------------------------------------------
     # Constructors
@@ -232,8 +350,8 @@ class SRSession:
         the spec's initialiser (seeded by ``seed``) unless an explicit
         trained ``layers`` stack is passed.  ``scale``/``clip`` default to
         the model config's values; everything else (backend, precision,
-        vertical_policy, cache_capacity, ...) passes through to
-        :class:`SRSession`.
+        vertical_policy, cache_capacity, pipeline_depth, ...) passes
+        through to :class:`SRSession`.
         """
         from repro.models.registry import get_sr_model
 
@@ -257,6 +375,7 @@ class SRSession:
         *,
         bucket: Optional[int] = None,
         cache_capacity: int = 8,
+        **kwargs,
     ) -> "SRSession":
         """A session pinned to one plan (and optionally one batch bucket).
 
@@ -264,7 +383,8 @@ class SRSession:
         geometry/numerics are fixed, requests for any other LR shape are
         rejected, and ``bucket`` (when given) replaces power-of-two
         bucketing so the stream's exact batch size is the one compiled
-        program.
+        program.  ``kwargs`` (``pipeline_depth``, ``donate_frames``, ...)
+        pass through to :class:`SRSession`.
         """
         session = cls(
             layers,
@@ -276,6 +396,7 @@ class SRSession:
             scale=plan.scale,
             clip=plan.clip,
             cache_capacity=cache_capacity,
+            **kwargs,
         )
         check_layer_channels(session.layers, plan.in_channels, plan.scale)
         session._pinned = plan
@@ -325,38 +446,98 @@ class SRSession:
             memo.pop(next(iter(memo)))
 
     @staticmethod
-    def cache_key(plan: SRPlan, bucket: int, dtype) -> tuple:
-        return (plan, int(bucket), np.dtype(dtype).name)
+    def serving_dtype(dtype) -> np.dtype:
+        """The dtype a request ACTUALLY serves in: jax canonicalizes
+        (float64 -> float32 without x64), so keying/compiling on the raw
+        host dtype would duplicate programs and mislabel cache entries."""
+        return np.dtype(jax.dtypes.canonicalize_dtype(np.dtype(dtype)))
+
+    @classmethod
+    def cache_key(cls, plan: SRPlan, bucket: int, dtype) -> tuple:
+        return (plan, int(bucket), cls.serving_dtype(dtype).name)
+
+    def _resolve_donate(self) -> bool:
+        if self.donate_frames is not None:
+            return bool(self.donate_frames)
+        return jax.default_backend() != "cpu"
+
+    def _acquire_stack(self, plan: SRPlan) -> Tuple[PreparedStack, tuple]:
+        """The session's PreparedStack for this plan's numerics/backend,
+        prepared on first use (blocking — NEVER inside serving latency)
+        and refcounted per cache entry."""
+        skey = plan.stack_key
+        rec = self._stacks.get(skey)
+        if rec is None:
+            t0 = time.perf_counter()
+            stack = prepare_stack(plan, self.layers)
+            jax.block_until_ready(stack)
+            rec = _StackRecord(
+                stack=stack, refs=0, prepare_s=time.perf_counter() - t0
+            )
+            self._stacks[skey] = rec
+        rec.refs += 1
+        return rec.stack, skey
+
+    def _release_stack(self, skey: tuple) -> None:
+        rec = self._stacks.get(skey)
+        if rec is None:
+            return
+        rec.refs -= 1
+        if rec.refs <= 0:
+            # last executor using these device buffers is gone — drop them
+            del self._stacks[skey]
+
+    def _on_evict(self, key, entry: _CacheEntry) -> None:
+        self._release_stack(entry.stack_key)
+
+    def clear_cache(self) -> None:
+        """Evict every compiled executor AND release the device-resident
+        prepared weights they pinned (frees accelerator memory; the next
+        request re-prepares and recompiles)."""
+        self._cache.clear()
 
     def executor_for(
         self, plan: SRPlan, bucket: int, dtype
     ) -> Tuple[_CacheEntry, bool]:
         """The compiled executor for ``(plan, bucket, dtype)``.
 
-        Cache miss compiles NOW, warmed on a zero dummy in the dtype that
-        will actually be served, and records the compile seconds on the
-        entry — so no later ``fn`` call on this key pays compilation.
-        Returns ``(entry, compiled_now)``.
+        Cache miss prepares the weight stack (once per session numerics —
+        shared and refcounted across entries) and compiles NOW, warmed on a
+        zero dummy in the dtype that will actually be served, recording the
+        compile seconds on the entry — so no later ``fn`` call on this key
+        pays compilation or weight prep.  Returns ``(entry, compiled_now)``.
         """
+        dtype = self.serving_dtype(dtype)
         key = self.cache_key(plan, bucket, dtype)
         entry = self._cache.get(key)
         if entry is not None:
             return entry, False
-        # own jit per entry: evicting the entry drops the only reference
-        # this layer holds to the compiled program (the module-level shared
-        # jit would pin it for the process); a re-miss re-acquires and
-        # re-times — fast when jax's internal caches still hold the program
-        fn = build_executor(plan, self.layers, shared_jit=False)
-        dummy = jnp.zeros((bucket, *plan.lr_shape), np.dtype(dtype))
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(dummy))
-        compile_s = time.perf_counter() - t0
+        stack, skey = self._acquire_stack(plan)
+        try:
+            donate = self._resolve_donate()
+            # own jit per entry: evicting the entry drops the only
+            # reference this layer holds to the compiled program (the
+            # module-level shared jit would pin it for the process); a
+            # re-miss re-acquires and re-times — fast when jax's internal
+            # caches still hold the program
+            fn = build_stack_executor(plan, stack, donate_frames=donate)
+            dummy = jnp.zeros((bucket, *plan.lr_shape), dtype)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(dummy))
+            compile_s = time.perf_counter() - t0
+        except BaseException:
+            # a failed build/compile must not strand the stack refcount —
+            # otherwise the device-resident weights could never be freed
+            self._release_stack(skey)
+            raise
         entry = _CacheEntry(
             fn=fn,
             plan=plan,
             bucket=int(bucket),
-            dtype=np.dtype(dtype).name,
+            dtype=dtype.name,
             compile_s=compile_s,
+            stack_key=skey,
+            donates=donate,
         )
         self._cache.put(key, entry)
         return entry, True
@@ -365,10 +546,11 @@ class SRSession:
         """The dtype the compiled executor emits for ``dtype`` input
         (abstract eval — no compile, memoised), so degenerate paths —
         empty clips — return exactly what a real batch would."""
-        key = (plan, np.dtype(dtype).name)
+        dtype = self.serving_dtype(dtype)
+        key = (plan, dtype.name)
         out = self._out_dtypes.get(key)
         if out is None:
-            out = output_spec(plan, self.layers, 1, np.dtype(dtype)).dtype
+            out = output_spec(plan, self.layers, 1, dtype).dtype
             self._memo_put(self._out_dtypes, key, out)
         return out
 
@@ -391,11 +573,22 @@ class SRSession:
 
         ``(H, W, C)`` -> ``(sH, sW, C)``; ``(T, H, W, C)`` ->
         ``(T, sH, sW, C)``; ``(B, T, H, W, C)`` -> ``(B, T, sH, sW, C)``.
-        The flattened frame batch is padded up to its bucket and served in
-        one compiled call per bucket-sized chunk; padded outputs are
-        trimmed and only real frames count in :meth:`stats`.
+        The flattened frame batch is served in bucket-sized chunks through
+        the pipelined dispatcher (up to ``pipeline_depth`` chunks in
+        flight); padded outputs are trimmed and only real frames count in
+        :meth:`stats`.  Host (numpy) input stays on the host and is staged
+        chunk-by-chunk with ``jax.device_put`` one chunk ahead of the
+        compute, so the H2D copy of chunk *t+1* overlaps with chunk *t*.
+        The caller's array is never donated — only session-staged slabs.
         """
-        arr = jnp.asarray(frames)
+        host = isinstance(frames, np.ndarray)
+        if host:
+            # cast to the dtype jax will actually serve in (float64 ->
+            # float32 without x64) BEFORE keying/staging, so one program
+            # serves both spellings and chunks match the compiled dtype
+            arr = frames.astype(self.serving_dtype(frames.dtype), copy=False)
+        else:
+            arr = jnp.asarray(frames)
         if arr.ndim == 3:
             flat = arr[None]
         elif arr.ndim == 4:
@@ -408,7 +601,7 @@ class SRSession:
                 f"got shape {arr.shape}"
             )
         H, W, C = flat.shape[1:]
-        plan = self.plan_for((H, W, C))
+        plan = self.plan_for((int(H), int(W), int(C)))
         hr = self._serve_flat(plan, flat)
         if arr.ndim == 3:
             return hr[0]
@@ -419,47 +612,129 @@ class SRSession:
     def serve_batch(
         self, plan: SRPlan, frames: jax.Array, real_frames: Optional[int] = None
     ) -> jax.Array:
-        """Run ONE pre-bucketed batch through the plan's executor,
-        recording its steady-state latency (a cache miss compiles on a
-        dummy first, outside the timed region).  ``real_frames`` counts
-        only that many leading frames in :meth:`stats` — the rest are
-        padding; the full batch is returned.
+        """Run ONE pre-bucketed batch through the plan's executor
+        synchronously, recording its steady-state latency (a cache miss
+        compiles on a dummy first, outside the timed region).  Dispatch and
+        complete latency are the same recorded value — a synchronous call
+        is not "dispatched" until its result is ready.  ``real_frames``
+        counts only that many leading frames in :meth:`stats` — the rest
+        are padding; the full batch is returned.  When frame donation is
+        active, ``frames`` is CONSUMED by the call.
         """
         n_real = frames.shape[0] if real_frames is None else real_frames
         entry, _ = self.executor_for(plan, frames.shape[0], frames.dtype)
         t0 = time.perf_counter()
         hr = entry.fn(frames)
         jax.block_until_ready(hr)
-        self._lat_ms.append((time.perf_counter() - t0) * 1e3)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self._dispatch_ms.append(dt_ms)
+        self._complete_ms.append(dt_ms)
+        self._span_s += dt_ms / 1e3
         self._frames += n_real
+        self._peak_inflight = max(self._peak_inflight, 1)
         return hr
 
-    def _serve_flat(self, plan: SRPlan, flat: jax.Array) -> jax.Array:
-        N = flat.shape[0]
+    def _staging_for(self, bucket: int, frame_shape, dtype) -> np.ndarray:
+        """One reusable host buffer for ragged-tail padding (no fresh
+        bucket-sized allocation per tail)."""
+        key = (bucket, tuple(frame_shape), np.dtype(dtype).str)
+        if self._staging is None or self._staging[0] != key:
+            self._staging = (key, np.zeros((bucket, *frame_shape), dtype))
+        return self._staging[1]
+
+    def _stage_chunk(
+        self, flat, start: int, bucket: int, total: int, donate: bool
+    ) -> Tuple[jax.Array, int]:
+        """Chunk ``[start, start+bucket)`` of the flat batch, padded to the
+        bucket and placed on device, plus its real-frame count.
+
+        Host (numpy) input: the slice (tail: copied into the one reused
+        staging buffer — ``jnp.zeros`` + ``concatenate`` per ragged tail
+        is gone) is shipped with ``jax.device_put``, which returns
+        immediately — the H2D copy overlaps with whatever the device is
+        computing.  Device input: the tail is padded with a single
+        ``jnp.pad`` (one fused op, same compiled program for every tail of
+        this bucket).  Under donation the returned slab is always
+        session-owned — if slicing would hand back the caller's own array
+        object, it is copied first.
+        """
+        n = min(bucket, total - start)
+        if isinstance(flat, np.ndarray):
+            if n < bucket:
+                buf = self._staging_for(bucket, flat.shape[1:], flat.dtype)
+                buf[:n] = flat[start : start + n]
+                buf[n:] = 0
+                return jax.device_put(buf), n
+            return jax.device_put(flat[start : start + bucket]), n
+        chunk = flat[start : start + n]
+        if n < bucket:
+            pad = [(0, bucket - n)] + [(0, 0)] * (chunk.ndim - 1)
+            return jnp.pad(chunk, pad), n
+        if donate and chunk is flat:
+            # a full-cover slice is the SAME array object in jax; donating
+            # it would consume the caller's buffer — take ownership first
+            chunk = jnp.array(chunk)
+        return chunk, n
+
+    def _serve_flat(self, plan: SRPlan, flat) -> jax.Array:
+        N = int(flat.shape[0])
         if N == 0:
             return jnp.zeros(
                 (0, *plan.hr_shape), self.output_dtype(plan, flat.dtype)
             )
         bucket = self._bucket_for(N)
-        outs = []
-        for i in range(0, N, bucket):
-            chunk = flat[i : i + bucket]
-            n = chunk.shape[0]
-            if n < bucket:  # pad up to the compiled bucket, trim after
-                pad = jnp.zeros((bucket - n, *chunk.shape[1:]), chunk.dtype)
-                chunk = jnp.concatenate([chunk, pad], axis=0)
-            outs.append(self.serve_batch(plan, chunk, real_frames=n)[:n])
+        # resolve the executor ONCE per request — a cache miss compiles on
+        # a dummy here, before the timed serving span starts
+        entry, _ = self.executor_for(plan, bucket, flat.dtype)
+        depth = self.pipeline_depth
+        starts = list(range(0, N, bucket))
+        inflight: Deque[Tuple[jax.Array, int, float]] = deque()
+        outs: List[jax.Array] = []
+
+        def complete_oldest() -> None:
+            hr, n, t0 = inflight.popleft()
+            jax.block_until_ready(hr)
+            self._complete_ms.append((time.perf_counter() - t0) * 1e3)
+            self._frames += n
+            outs.append(hr[:n] if n != hr.shape[0] else hr)
+
+        t_span = time.perf_counter()
+        staged = self._stage_chunk(flat, starts[0], bucket, N, entry.donates)
+        for j in range(len(starts)):
+            chunk, n = staged
+            t0 = time.perf_counter()
+            hr = entry.fn(chunk)  # async dispatch: returns immediately
+            self._dispatch_ms.append((time.perf_counter() - t0) * 1e3)
+            inflight.append((hr, n, t0))
+            self._peak_inflight = max(self._peak_inflight, len(inflight))
+            if j + 1 < len(starts):
+                # stage the NEXT slab while the device chews on this one
+                staged = self._stage_chunk(
+                    flat, starts[j + 1], bucket, N, entry.donates
+                )
+            while len(inflight) >= depth:
+                complete_oldest()
+        while inflight:
+            complete_oldest()
+        self._span_s += time.perf_counter() - t_span
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
     # ------------------------------------------------------------------
     # Introspection
     # ------------------------------------------------------------------
+    @property
+    def _lat_ms(self) -> List[float]:
+        """Back-compat alias: the complete-latency series."""
+        return self._complete_ms
+
     def cache_stats(self) -> dict:
         """Compile-cache counters plus per-entry compile metadata.
 
         ``hits``/``misses``/``evictions`` are cumulative; ``entries`` lists
         live entries in LRU -> MRU order, each with its plan shape, batch
-        bucket, serving dtype and measured compile seconds.
+        bucket, serving dtype and measured compile seconds.  ``stacks``
+        lists the device-resident prepared weight stacks with their entry
+        refcounts, one-time prepare seconds and resident bytes.
         """
         stats = self._cache.stats()
         stats["entries"] = [
@@ -471,16 +746,40 @@ class SRSession:
                 "bucket": e.bucket,
                 "dtype": e.dtype,
                 "compile_s": e.compile_s,
+                "donates": e.donates,
             }
             for e in self._cache.entries()
+        ]
+        stats["stacks"] = [
+            {
+                "precision": k[0],
+                "backend": k[1],
+                "refs": rec.refs,
+                "prepare_s": rec.prepare_s,
+                "resident_bytes": rec.stack.nbytes(),
+            }
+            for k, rec in self._stacks.items()
         ]
         return stats
 
     def stats(self, **extra) -> StreamStats:
-        """Steady-state serving stats — compile time is never included
-        (compilation happens on a dummy inside the cache-miss path)."""
-        return latency_stats(self._lat_ms, self._frames, **extra)
+        """Steady-state serving stats — compile and weight-prep time are
+        never included (both happen inside the cache-miss path, outside
+        the timed span).  Percentiles split dispatch (enqueue) from
+        complete (result ready); ``fps`` is real frames over the serving
+        wall-clock span, so pipelined overlap shows up as throughput."""
+        return latency_stats(
+            self._complete_ms,
+            self._frames,
+            dispatch_ms=self._dispatch_ms,
+            total_s=self._span_s,
+            peak_inflight=self._peak_inflight,
+            **extra,
+        )
 
     def reset_stats(self) -> None:
-        self._lat_ms.clear()
+        self._dispatch_ms.clear()
+        self._complete_ms.clear()
+        self._span_s = 0.0
         self._frames = 0
+        self._peak_inflight = 0

@@ -17,6 +17,12 @@ session: compilation always happens on a warmup dummy in the dtype being
 served, so no ``process`` call's recorded latency ever includes a compile
 — previously a first batch in a non-fp32 dtype silently recompiled inside
 the timed region.
+
+The shim pins ``pipeline_depth=1`` and ``donate_frames=False``: every
+batch blocks before the next dispatches and caller arrays are never
+consumed — exactly the legacy driver's behavior.  Migrate to
+``SRSession`` (``pipeline_depth=2`` default) for the overlapped dispatch
+path; see the README "Serving pipeline" section.
 """
 
 from __future__ import annotations
@@ -57,7 +63,11 @@ class VideoStream:
         # the dtype this stream is expected to serve: warmup compiles for
         # it, so the first real batch in it never pays a compile
         self.dtype = np.dtype(dtype)
-        self._session = SRSession.from_plan(plan, layers, bucket=batch_size)
+        # legacy semantics: blocking per-batch serving, no frame donation
+        self._session = SRSession.from_plan(
+            plan, layers, bucket=batch_size,
+            pipeline_depth=1, donate_frames=False,
+        )
 
     @property
     def session(self) -> SRSession:

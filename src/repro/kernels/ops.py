@@ -10,8 +10,9 @@ Python for validation) and False on TPU (compiled to Mosaic).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,8 @@ __all__ = [
     "tilted_fused_stack",
     "tilted_fused_frames",
     "pack_layers",
+    "pack_stack",
+    "PackedLayers",
     "default_interpret",
 ]
 
@@ -62,12 +65,57 @@ def pack_layers(layers: Sequence[ConvLayer], chp: Optional[int] = None, dtype=No
     return w, b, chp
 
 
+@dataclasses.dataclass
+class PackedLayers:
+    """A conv stack in the kernel's packed storage form, plus its static
+    facts (channel pad, ReLU flags, real output channels).
+
+    Packing happens where this object is built — typically ONCE per weight
+    stack, outside any jitted serving call (``engine.executor.prepare_stack``)
+    — so the per-batch kernel launch takes the padded ``(L,3,3,Chp,Chp)`` /
+    ``(L,Chp)`` arrays as plain device-resident inputs instead of re-running
+    the zero-pad scatter on every forward.
+    """
+
+    w: jax.Array  # (L, 3, 3, Chp, Chp)
+    b: jax.Array  # (L, Chp)
+    chp: int
+    relu: Tuple[bool, ...]
+    out_channels: int  # Ch_L of the real (unpadded) stack
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.relu)
+
+
+jax.tree_util.register_dataclass(
+    PackedLayers,
+    data_fields=["w", "b"],
+    meta_fields=["chp", "relu", "out_channels"],
+)
+
+
+def pack_stack(
+    layers: Sequence[ConvLayer], chp: Optional[int] = None, dtype=None
+) -> PackedLayers:
+    """Pack a conv stack for the kernel (``pack_layers``) and bundle the
+    static facts the launch needs, so callers can pre-pack device-resident
+    weights and pass them via ``tilted_fused_frames(..., packed=...)``."""
+    w, b, chp = pack_layers(layers, chp, dtype=dtype)
+    return PackedLayers(
+        w=w,
+        b=b,
+        chp=chp,
+        relu=tuple(bool(l.relu) for l in layers),
+        out_channels=layers[-1].co,
+    )
+
+
 def _tilted_fused_bands(
     xb: jax.Array,  # (B, R, W, C0) band-major input
-    layers: Sequence[ConvLayer],
+    packed: PackedLayers,
     *,
     tile_cols: int,
-    chp: Optional[int],
     add_anchor: bool,
     anchor_repeats: int,
     interpret: bool,
@@ -83,12 +131,11 @@ def _tilted_fused_bands(
     engine serve a whole frame batch with a single ``pallas_call``.
     """
     B, R, W, C0 = xb.shape
-    C, L = tile_cols, len(layers)
+    C, L = tile_cols, packed.num_layers
     sched = make_schedule(width=W, tile_cols=C, num_layers=L)
     K = sched.num_tiles
-    co_l = layers[-1].co
+    chp, co_l = packed.chp, packed.out_channels
 
-    w, b, chp = pack_layers(layers, chp, dtype=compute_dtype)
     c0p = _round_up(C0, 8)
 
     xb = jnp.pad(xb, ((0, 0), (0, 0), (0, 0), (0, c0p - C0)))
@@ -99,11 +146,11 @@ def _tilted_fused_bands(
     out = _tilted.tilted_fusion_call(
         xs,
         first_col,
-        w,
-        b,
+        packed.w,
+        packed.b,
         width=W,
         tile_cols=C,
-        relu_flags=[l.relu for l in layers],
+        relu_flags=list(packed.relu),
         add_anchor=add_anchor,
         in_channels=C0,
         anchor_repeats=anchor_repeats,
@@ -154,7 +201,7 @@ def tilted_fused_stack(
 
 def tilted_fused_frames(
     frames: jax.Array,
-    layers: Sequence[ConvLayer],
+    layers: Optional[Sequence[ConvLayer]] = None,
     *,
     band_rows: int = 60,
     tile_cols: int = 8,
@@ -164,6 +211,7 @@ def tilted_fused_frames(
     vertical_policy: str = "zero",
     compute_dtype=None,
     interpret: Optional[bool] = None,
+    packed: Optional[PackedLayers] = None,
 ) -> jax.Array:
     """Tilted layer fusion of a batch of frames (N, H, W, C0) -> (N, H, W, ChL).
 
@@ -178,6 +226,11 @@ def tilted_fused_frames(
     is exact w.r.t. the full-image reference up to matmul accumulation
     order.  ``compute_dtype`` is the kernel's on-chip feature-map dtype
     (defaults to the input dtype; MXU accumulation stays fp32).
+
+    ``packed`` supplies a pre-packed weight stack (:func:`pack_stack`); when
+    given, ``layers`` is ignored and the per-call weight pad/scatter is
+    skipped — the serving engine packs once per weight stack and reuses the
+    device-resident arrays across every batch.
     """
     N, H, W, C0 = frames.shape
     R = band_rows
@@ -187,15 +240,18 @@ def tilted_fused_frames(
         raise ValueError(
             f"vertical_policy {vertical_policy!r} not in {VERTICAL_POLICIES}"
         )
+    if packed is None:
+        if layers is None:
+            raise ValueError("pass either layers or packed")
+        packed = pack_stack(layers, chp, dtype=compute_dtype)
     interpret = default_interpret() if interpret is None else interpret
-    L = len(layers)
+    L = packed.num_layers
     if vertical_policy == "halo":
         slabs, bounds = halo_slabs(frames, R, L)
         out = _tilted_fused_bands(
             slabs,
-            layers,
+            packed,
             tile_cols=tile_cols,
-            chp=chp,
             add_anchor=add_anchor,
             anchor_repeats=anchor_repeats,
             interpret=interpret,
@@ -207,9 +263,8 @@ def tilted_fused_frames(
     else:
         out = _tilted_fused_bands(
             frames.reshape(N * (H // R), R, W, C0),
-            layers,
+            packed,
             tile_cols=tile_cols,
-            chp=chp,
             add_anchor=add_anchor,
             anchor_repeats=anchor_repeats,
             interpret=interpret,
