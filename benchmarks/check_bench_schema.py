@@ -27,6 +27,8 @@ from engine_throughput import (  # noqa: E402
     PIPELINE_KEYS,
     RECORD_KEYS,
     ROOFLINE_KEYS,
+    SERVER_KEYS,
+    SERVER_MODE_KEYS,
 )
 
 
@@ -57,6 +59,23 @@ def check_record(rec: dict) -> list:
             "pipeline comparison must run on a >= 4-chunk clip "
             f"(got chunks={pipe.get('chunks')})"
         )
+    server = rec.get("server", {})
+    _require(server, SERVER_KEYS, "server", errors)
+    for mode in ("solo", "coalesced"):
+        _require(server.get(mode, {}), SERVER_MODE_KEYS,
+                 f"server.{mode}", errors)
+    if server.get("bit_exact") is not True:
+        errors.append(
+            "server.bit_exact must be true — coalesced serving changed a "
+            "request's output"
+        )
+    solo_d = server.get("solo", {}).get("dispatches_per_burst")
+    coal_d = server.get("coalesced", {}).get("dispatches_per_burst")
+    if solo_d is not None and coal_d is not None and coal_d > solo_d:
+        errors.append(
+            "server.coalesced must not dispatch MORE than solo serving "
+            f"(coalesced {coal_d} vs solo {solo_d} per burst)"
+        )
     return errors
 
 
@@ -76,6 +95,7 @@ def main(argv) -> int:
         else:
             print(f"{path}: ok "
                   f"(pipelined x{rec['pipeline']['speedup']} vs sync, "
+                  f"coalesced x{rec['server']['speedup']} vs solo, "
                   f"bit_exact={rec['pipeline']['bit_exact']})")
     return status
 

@@ -18,6 +18,19 @@ compiled executor's roofline terms (per-frame FLOPs / HBM bytes via
 ``engine.plan_cost``) to tie serving throughput back to the paper's
 DRAM-traffic claim.
 
+The ``server`` section measures the SRServer front door on a burst of
+concurrent small requests:
+
+* ``solo``      — each request submitted and resolved alone (every request
+  dispatches its own bucket, the pre-server behavior).
+* ``coalesced`` — the whole burst submitted before the first ``result()``,
+  so the micro-batching scheduler packs all requests' frames into shared
+  bucket-sized dispatches.
+
+Per-request outputs are asserted bit-exact across the two modes; the
+record keeps each mode's dispatch count and mean bucket fill ratio plus
+the coalesced-vs-solo speedup.
+
     PYTHONPATH=src python benchmarks/engine_throughput.py            # CSV rows
     PYTHONPATH=src python benchmarks/engine_throughput.py --json    # + BENCH_engine.json
     PYTHONPATH=src python benchmarks/engine_throughput.py --quick   # CI smoke sizes
@@ -37,7 +50,7 @@ import jax
 import numpy as np
 
 from repro.data.synthetic import sr_pair_batch
-from repro.engine import SRSession, bucket_batch, plan_cost
+from repro.engine import SRServer, SRSession, bucket_batch, plan_cost
 from repro.models.abpn import ABPNConfig, init_abpn
 
 DEFAULT_BATCHES = (1, 4, 8)
@@ -47,7 +60,7 @@ DEFAULT_BATCHES = (1, 4, 8)
 RECORD_KEYS = (
     "bench", "backend", "precision", "vertical_policy", "lr_shape",
     "band_rows", "jax_backend", "platform", "batch", "cache", "pipeline",
-    "roofline",
+    "roofline", "server",
 )
 BATCH_KEYS = (
     "frames_per_s", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
@@ -64,6 +77,13 @@ MODE_KEYS = (
 ROOFLINE_KEYS = (
     "batch", "flops", "hbm_bytes", "flops_per_frame", "hbm_bytes_per_frame",
     "weight_bytes_resident",
+)
+SERVER_KEYS = (
+    "request_frames", "concurrent_requests", "reps", "solo", "coalesced",
+    "speedup", "bit_exact",
+)
+SERVER_MODE_KEYS = (
+    "frames_per_s", "dispatches_per_burst", "mean_fill_ratio", "bucket",
 )
 
 
@@ -156,6 +176,62 @@ def measure_pipeline(layers, cfg, opts, *, bucket, chunks, reps) -> dict:
     return out
 
 
+def measure_server(layers, cfg, opts, *, req_frames, n_requests, reps) -> dict:
+    """Coalesced vs solo serving of ``n_requests`` concurrent
+    ``req_frames``-frame requests through an ``SRServer``.
+
+    Solo resolves each request before submitting the next (every request
+    pays its own bucket dispatch); coalesced submits the whole burst
+    first, so the scheduler packs the burst into shared bucket-sized
+    dispatches.  Outputs are checked bit-exact per request across modes.
+    """
+    h, w = opts["height"], opts["width"]
+    total = req_frames * n_requests
+    clip, _ = sr_pair_batch(2, total, lr_shape=(h, w), scale=cfg.scale)
+    requests = [clip[i * req_frames:(i + 1) * req_frames]
+                for i in range(n_requests)]
+    out = {"request_frames": req_frames, "concurrent_requests": n_requests,
+           "reps": reps}
+    results = {}
+    for mode in ("solo", "coalesced"):
+        session = _session(layers, cfg, opts)
+        session.max_bucket = bucket_batch(total)
+        server = SRServer({"bench": session})
+
+        def burst():
+            if mode == "solo":
+                return [server.submit(r).result() for r in requests]
+            futs = [server.submit(r) for r in requests]
+            return [f.result() for f in futs]
+
+        burst()  # compile pass for this mode's bucket (outside the timing)
+        before = server.scheduler_stats()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            hrs = burst()
+        dt = time.perf_counter() - t0
+        after = server.scheduler_stats()
+        dispatches = after["dispatches"] - before["dispatches"]
+        real = after["frames_dispatched"] - before["frames_dispatched"]
+        slots = after["slots_dispatched"] - before["slots_dispatched"]
+        results[mode] = hrs
+        out[mode] = {
+            "frames_per_s": round(total * reps / dt, 2) if dt > 0 else 0.0,
+            "dispatches_per_burst": dispatches / reps,
+            "mean_fill_ratio": round(real / slots, 4) if slots else 0.0,
+            "bucket": int(after["recent_dispatches"][-1]["bucket"]),
+        }
+    out["bit_exact"] = bool(all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(results["solo"], results["coalesced"])
+    ))
+    out["speedup"] = round(
+        out["coalesced"]["frames_per_s"] / max(out["solo"]["frames_per_s"], 1e-9),
+        3,
+    )
+    return out
+
+
 def measure(
     *,
     backend: str = "tilted",
@@ -168,9 +244,12 @@ def measure(
     reps: int = 4,
     pipe_bucket: int = 4,
     pipe_chunks: int = 4,
+    srv_request_frames: int = 2,
+    srv_requests: int = 4,
 ) -> dict:
     """The full benchmark record: per-batch-size stats, the pipelined-vs-
-    sync clip comparison, and the compiled executor's roofline terms."""
+    sync clip comparison, the server coalesced-vs-solo comparison, and the
+    compiled executor's roofline terms."""
     cfg = ABPNConfig()
     layers = init_abpn(jax.random.PRNGKey(0), cfg)
     opts = {
@@ -184,6 +263,10 @@ def measure(
     batch, cache = measure_batches(layers, cfg, opts, batch_sizes, reps)
     pipeline = measure_pipeline(
         layers, cfg, opts, bucket=pipe_bucket, chunks=pipe_chunks, reps=reps
+    )
+    server = measure_server(
+        layers, cfg, opts, req_frames=srv_request_frames,
+        n_requests=srv_requests, reps=reps,
     )
     probe = _session(layers, cfg, opts)
     plan = probe.plan_for((height, width, cfg.in_channels))
@@ -200,6 +283,7 @@ def measure(
         "batch": batch,
         "cache": cache,
         "pipeline": pipeline,
+        "server": server,
         "roofline": roofline,
     }
 
@@ -219,6 +303,14 @@ def rows():
                 f"pipelined {p['pipelined']['frames_per_s']:.1f} vs sync "
                 f"{p['sync']['frames_per_s']:.1f} frames/s "
                 f"(x{p['speedup']:.2f}, bit_exact={p['bit_exact']})"))
+    v = rec["server"]
+    out.append(("engine.server.coalesce", us,
+                f"coalesced {v['coalesced']['frames_per_s']:.1f} vs solo "
+                f"{v['solo']['frames_per_s']:.1f} frames/s "
+                f"(x{v['speedup']:.2f}, fill "
+                f"{v['coalesced']['mean_fill_ratio']:.2f} vs "
+                f"{v['solo']['mean_fill_ratio']:.2f}, "
+                f"bit_exact={v['bit_exact']})"))
     c = rec["cache"]
     out.append(("engine.plan_cache", us,
                 f"{c['misses']} compiles, hit rate {c['hit_rate']:.2f}"))
@@ -261,7 +353,8 @@ def main():
               pipe_bucket=args.pipe_bucket, pipe_chunks=args.pipe_chunks)
     if args.quick:
         kw.update(height=24, width=16, batch_sizes=(1, 2), reps=2,
-                  pipe_bucket=2, pipe_chunks=4)
+                  pipe_bucket=2, pipe_chunks=4,
+                  srv_request_frames=1, srv_requests=2)
     rec = measure(**kw)
     print("name,us_per_call,derived")
     for bs, r in rec["batch"].items():
@@ -276,6 +369,18 @@ def main():
     print(f'engine.pipeline.pipelined,{p["pipelined"]["mean_ms"] * 1e3:.1f},'
           f'"{p["pipelined"]["frames_per_s"]:.1f} frames/s '
           f'(x{p["speedup"]:.2f} vs sync, bit_exact={p["bit_exact"]})"')
+    v = rec["server"]
+    print(f'engine.server.solo,0.0,'
+          f'"{v["solo"]["frames_per_s"]:.1f} frames/s, '
+          f'{v["solo"]["dispatches_per_burst"]:.1f} dispatches/burst '
+          f'(bucket {v["solo"]["bucket"]}, fill '
+          f'{v["solo"]["mean_fill_ratio"]:.2f})"')
+    print(f'engine.server.coalesced,0.0,'
+          f'"{v["coalesced"]["frames_per_s"]:.1f} frames/s, '
+          f'{v["coalesced"]["dispatches_per_burst"]:.1f} dispatches/burst '
+          f'(bucket {v["coalesced"]["bucket"]}, fill '
+          f'{v["coalesced"]["mean_fill_ratio"]:.2f}, '
+          f'x{v["speedup"]:.2f} vs solo, bit_exact={v["bit_exact"]})"')
     r = rec["roofline"]
     print(f'engine.roofline.b{r["batch"]},0.0,'
           f'"{r["hbm_bytes_per_frame"] / 1e6:.2f} MB HBM/frame, '

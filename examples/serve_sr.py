@@ -1,22 +1,37 @@
-"""Serve super-resolution through the SRSession API (``repro.engine``).
+"""Serve super-resolution through the SRServer front door (``repro.engine``).
 
-One session = one model + serving policy; every request shape is handled
-internally: the session derives the band geometry per resolution, buckets
-batch sizes to powers of two, and compiles executors on demand into an
-LRU plan cache.  This demo streams batched requests at the main
-resolution, then a second resolution through the SAME session, and prints
-the compile-cache counters alongside the latency stats.
+One server = one or more models behind a micro-batching scheduler: callers
+``submit(frames)`` and get an ``SRFuture`` back; concurrent requests that
+share a ``(model, plan, dtype)`` key are coalesced into single bucket-sized
+dispatches (real frames fill the power-of-two buckets instead of padding),
+and ``server.stream(...)`` serves frame-at-a-time live video.  This demo:
+
+1. submits a burst of concurrent small requests and resolves them together
+   (the scheduler packs the burst into full buckets),
+2. streams single frames through the async generator,
+3. sends a second resolution through the SAME server (a new plan-cache
+   entry, no new object graph),
+
+then prints the coalescing counters next to the serving latency stats.
 
     PYTHONPATH=src python examples/serve_sr.py --frames 16 --batch 4
     PYTHONPATH=src python examples/serve_sr.py --backend tilted --precision bf16
 """
 
 import argparse
+import asyncio
 
 import jax
 
 from repro.data.synthetic import sr_pair_batch
-from repro.engine import SRSession
+from repro.engine import SRServer
+
+
+async def stream_clip(server, clip):
+    outs = []
+    async for hr in server.stream(list(clip), lookahead=4):
+        outs.append(hr)
+    return outs
 
 
 def main():
@@ -24,7 +39,8 @@ def main():
     ap.add_argument("--model", default="abpn_x3",
                     help="registered SR model (weights via models.registry)")
     ap.add_argument("--frames", type=int, default=8, help="total frames to serve")
-    ap.add_argument("--batch", type=int, default=4, help="frames per request")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="frames per submitted request")
     ap.add_argument("--height", type=int, default=120)  # paper: 360
     ap.add_argument("--width", type=int, default=64)    # paper: 640
     ap.add_argument("--backend", default="kernel",
@@ -36,50 +52,73 @@ def main():
                     choices=["zero", "halo", "replicate"],
                     help="vertical band boundary policy (all backends)")
     ap.add_argument("--pipeline-depth", type=int, default=2,
-                    help="chunks in flight per request (1 = blocking, "
-                         "2 = double-buffered dispatch)")
+                    help="dispatches in flight per session (1 = blocking, "
+                         "2 = double-buffered)")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="queue bound in frames (backpressure); default unbounded")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    session = SRSession.open(
+    server = SRServer.open(
         args.model,
         backend=args.backend,
         precision=args.precision,
         vertical_policy=args.policy,
         pipeline_depth=args.pipeline_depth,
+        max_inflight_frames=args.max_inflight,
         seed=args.seed,
     )
+    session = server.session()
 
-    # Stream the clip as batched requests; the first request per
-    # (resolution, bucket) compiles — on a dummy, outside the latency stats.
+    # 1) A burst of concurrent requests: submit them ALL, then resolve —
+    # the first request per (resolution, bucket) compiles on a dummy,
+    # outside the latency stats; the scheduler coalesces the queued burst
+    # into shared bucket-sized dispatches.
     if args.frames > 0:
         lr_frames, _ = sr_pair_batch(
             0, args.frames, lr_shape=(args.height, args.width),
             scale=session.scale
         )
-        for i in range(0, args.frames, args.batch):
-            session.upscale(lr_frames[i : i + args.batch])
+        futures = [
+            server.submit(lr_frames[i : i + args.batch])
+            for i in range(0, args.frames, args.batch)
+        ]
+        for f in futures:
+            f.result()
 
-    s = session.stats()  # main-resolution stats only (snapshot before lr2)
+    # 2) Frame-at-a-time live video through the async generator (the
+    # lookahead keeps the coalescer's queue full even for one stream).
+    stream_frames, _ = sr_pair_batch(
+        3, 4, lr_shape=(args.height, args.width), scale=session.scale
+    )
+    asyncio.run(stream_clip(server, stream_frames))
 
-    # Same session, different resolution: no new object graph, just a new
-    # plan-cache entry (shape-agnostic serving is the point of the API).
+    s = session.stats()  # main-resolution stats (snapshot before lr2)
+
+    # 3) Same server, different resolution: just a new plan-cache entry
+    # (shape-agnostic serving is the point of the API).
     h2, w2 = args.height // 2, args.width
     if h2 > 0:
         lr2, _ = sr_pair_batch(1, 2, lr_shape=(h2, w2), scale=session.scale)
-        session.upscale(lr2)
+        server.submit(lr2).result()
 
     plan = session.plan_for((args.height, args.width, session.layers[0].ci))
     c = session.cache_stats()
-    print(f"session: {session.model} {plan.backend}/{plan.precision}, "
+    g = server.scheduler_stats()
+    print(f"server: {server.models[0]} {plan.backend}/{plan.precision}, "
           f"{plan.num_bands} bands x {plan.schedule.num_tiles} tiles")
-    print(f"served {s['frames']} frames over {s['batches']} requests "
+    print(f"served {s['frames']} frames over {s['batches']} dispatches "
           f"({args.height}x{args.width} -> {plan.hr_shape[0]}x{plan.hr_shape[1]}, "
           f"plus a {h2}x{w2} request)")
     print(f"throughput {s['fps']:.1f} frames/s  complete p50 {s['p50_ms']:.1f} ms  "
           f"p99 {s['p99_ms']:.1f} ms  dispatch p50 {s['dispatch_p50_ms']:.2f} ms  "
           f"(depth {args.pipeline_depth}, peak in-flight {s['peak_inflight']}, "
           f"{jax.default_backend()} backend)")
+    print(f"scheduler: {g['submitted_requests']} requests -> "
+          f"{g['dispatches']} dispatches ({g['coalesced_dispatches']} coalesced), "
+          f"mean bucket fill {g['mean_fill_ratio']:.2f}, "
+          f"{g['padded_frames']} padded frames, peak queue "
+          f"{g['peak_pending_frames']} frames")
     print(f"plan cache: {c['misses']} compiles, {c['hits']} hits, "
           f"hit rate {c['hit_rate']:.2f}; buckets "
           f"{[(tuple(e['lr_shape'][:2]), e['bucket'], round(e['compile_s'], 2)) for e in c['entries']]}")

@@ -1,15 +1,27 @@
 """Batched SR execution engine (the serving subsystem).
 
-``SRSession`` (session.py) is the serving API: ``SRSession.open(model)``
-resolves weights through the model registry, ``session.upscale(frames)``
-serves any ``(H, W, C)`` / ``(T, H, W, C)`` / ``(B, T, H, W, C)`` request —
-deriving the :class:`SRPlan` per resolution (``SRPlan.from_request``),
-bucketing batches to powers of two, and compiling executors on demand into
-an LRU :class:`PlanCache` (``session.cache_stats()``).  Serving is
-pipelined: weights are prepared once per session into a device-resident
-:class:`PreparedStack`, multi-bucket requests keep up to ``pipeline_depth``
-chunks in flight (double-buffered dispatch), and executors can donate the
-frame slab back to XLA (``donate_frames``).
+``SRServer`` (server.py) is the serving front door:
+``SRServer.open(models...)`` hosts one or more named sessions,
+``server.submit(frames, model=..., priority=...)`` returns an
+:class:`SRFuture`, and ``server.stream(...)`` is an async generator for
+frame-at-a-time live video.  A micro-batching scheduler (scheduler.py)
+coalesces concurrent requests that share a ``(model, plan, dtype)`` key
+into single bucket-sized dispatches (real frames instead of padding) and
+enforces a bounded queue with backpressure (``max_inflight_frames``,
+block-or-reject admission).
+
+``SRSession`` (session.py) is the per-model layer underneath:
+``SRSession.open(model)`` resolves weights through the model registry and
+``session.upscale(frames)`` — now a thin synchronous shim over
+``session.submit(frames).result()`` — serves any ``(H, W, C)`` /
+``(T, H, W, C)`` / ``(B, T, H, W, C)`` request, deriving the
+:class:`SRPlan` per resolution (``SRPlan.from_request``), bucketing
+batches to powers of two, and compiling executors on demand into an LRU
+:class:`PlanCache` (``session.cache_stats()``).  Serving is pipelined:
+weights are prepared once per session into a device-resident
+:class:`PreparedStack`, dispatches keep up to ``pipeline_depth`` chunks in
+flight (double buffering), and executors can donate the frame slab back to
+XLA (``donate_frames``).
 
 Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
 numerics, boundary policy, backend — and ``build_executor``/``run``
@@ -38,10 +50,16 @@ from repro.engine.plan import (
     derive_band_rows,
     make_plan,
 )
+from repro.engine.scheduler import MicroBatchScheduler, QueueFullError
+from repro.engine.server import SRFuture, SRServer
 from repro.engine.session import PlanCache, SRSession, StreamStats, bucket_batch
 from repro.engine.stream import VideoStream
 
 __all__ = [
+    "SRServer",
+    "SRFuture",
+    "MicroBatchScheduler",
+    "QueueFullError",
     "SRSession",
     "PlanCache",
     "bucket_batch",

@@ -1,0 +1,283 @@
+"""Micro-batching scheduler — cross-request coalescing into bucket dispatches.
+
+The paper's accelerator sustains its frame rate by keeping the datapath fed
+with a continuous stream of bands; the serving analogue is keeping every
+compiled bucket full of REAL frames.  ``MicroBatchScheduler`` is the pure
+bookkeeping half of that (no jax, no compute — execution lives in
+``engine.server``):
+
+* **Admission.**  Requests enter per-key FIFO queues; the server enforces
+  its ``max_inflight_frames`` bound at admission and raises
+  :class:`QueueFullError` (or blocks and drains) when the queue is full.
+* **Coalescing.**  The key is ``(model, plan, dtype-name)`` — exactly the
+  session's compile-cache key plus the model name — because frames that
+  share a key are served by the SAME compiled executor, so frames from
+  different requests can ride in ONE bucket-sized dispatch.  Two concurrent
+  half-bucket requests become a single full bucket (fill ratio 1.0) instead
+  of two padded dispatches.
+* **Bucket choice.**  A dispatch's bucket is derived from the key's TOTAL
+  pending frames (``session._bucket_for`` — power-of-two, ``max_bucket``
+  capped), so queued traffic fills the largest legal bucket.  A request
+  left partially served pins its bucket (the *carry* bucket) for its tail
+  dispatches — the same program serves every chunk of a long clip, exactly
+  like the pre-server pipelined path (no tail-driven recompiles).
+* **Priority.**  Across keys, the key holding the highest-priority request
+  dispatches first (FIFO on arrival within a priority level).  Within a
+  key, requests coalesce in arrival order — they share dispatches anyway.
+
+Counters (:meth:`MicroBatchScheduler.stats`) record dispatches, how many
+coalesced multiple requests, real frames vs bucket slots (the mean fill
+ratio — the padding the coalescer eliminated), queue depth peaks and
+admission rejections; ``recent_dispatches`` keeps a bounded log for tests
+and debugging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+__all__ = [
+    "MicroBatchScheduler",
+    "QueueFullError",
+    "SchedRequest",
+    "Ticket",
+    "Dispatch",
+]
+
+# bounded debug/test log of formed dispatches (oldest dropped first)
+RECENT_DISPATCH_LOG = 256
+
+
+class QueueFullError(RuntimeError):
+    """Admission rejected: the server's ``max_inflight_frames`` bound is
+    full and the admission policy is ``"reject"``."""
+
+
+@dataclasses.dataclass
+class SchedRequest:
+    """One admitted request: a flat ``(N, H, W, C)`` frame batch plus the
+    assembly state the server needs to slice its results back out.
+
+    ``served`` counts frames handed to dispatches, ``completed`` frames
+    whose HR output has been sliced into ``pieces``; the request's future
+    resolves when ``completed == n``.
+    """
+
+    seq: int
+    key: tuple  # (model, plan, dtype_name) — the coalescing key
+    session: object  # owning SRSession
+    plan: object  # SRPlan
+    flat: object  # (N, H, W, C) numpy or jax array, serving dtype applied
+    n: int
+    priority: int
+    future: object  # SRFuture
+    ndim: int  # caller's original rank (3 | 4 | 5)
+    lead: Optional[tuple]  # (B, T) when ndim == 5
+    served: int = 0
+    completed: int = 0
+    pieces: List = dataclasses.field(default_factory=list)
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's slice of a dispatch: frames ``[start, start + n)`` of
+    the request occupy slab rows ``[slot, slot + n)``."""
+
+    request: SchedRequest
+    start: int
+    n: int
+    slot: int
+
+
+@dataclasses.dataclass
+class Dispatch:
+    """A formed bucket-sized dispatch: which requests' frames fill which
+    slab rows.  Rows past ``real`` are zero padding."""
+
+    key: tuple
+    session: object
+    plan: object
+    bucket: int
+    tickets: List[Ticket]
+
+    @property
+    def real(self) -> int:
+        return sum(t.n for t in self.tickets)
+
+    @property
+    def fill(self) -> float:
+        return self.real / self.bucket
+
+    @property
+    def requests(self) -> List[SchedRequest]:
+        seen, out = set(), []
+        for t in self.tickets:
+            if id(t.request) not in seen:
+                seen.add(id(t.request))
+                out.append(t.request)
+        return out
+
+
+class MicroBatchScheduler:
+    """Queues + coalescing policy; the server drives it under its lock."""
+
+    def __init__(self):
+        self._queues: Dict[tuple, Deque[SchedRequest]] = {}
+        self._carry: Dict[tuple, int] = {}  # pinned bucket of a partial head
+        self._seq = itertools.count()
+        self.pending_frames = 0
+        self.peak_pending_frames = 0
+        self.submitted_requests = 0
+        self.submitted_frames = 0
+        self.dispatches = 0
+        self.coalesced_dispatches = 0
+        self.frames_dispatched = 0
+        self.slots_dispatched = 0
+        self.rejected = 0
+        self.recent_dispatches: Deque[dict] = deque(maxlen=RECENT_DISPATCH_LOG)
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def next_seq(self) -> int:
+        return next(self._seq)
+
+    def add(self, req: SchedRequest) -> None:
+        self._queues.setdefault(req.key, deque()).append(req)
+        self.submitted_requests += 1
+        self.submitted_frames += req.n
+        self.pending_frames += req.n
+        self.peak_pending_frames = max(self.peak_pending_frames, self.pending_frames)
+
+    def note_rejected(self) -> None:
+        self.rejected += 1
+
+    def note_empty_request(self) -> None:
+        """An admitted zero-frame request (resolved without a dispatch)."""
+        self.submitted_requests += 1
+
+    def has_pending(self) -> bool:
+        return self.pending_frames > 0
+
+    def pending_for(self, key: tuple) -> int:
+        q = self._queues.get(key)
+        return sum(r.n - r.served for r in q) if q else 0
+
+    def drop(self, req: SchedRequest) -> None:
+        """Remove a failed request's undispatched remainder from its queue
+        (frames already handed to in-flight dispatches are past recall —
+        their tickets are skipped at completion)."""
+        q = self._queues.get(req.key)
+        if not q or req not in q:
+            return
+        remaining = req.n - req.served
+        q.remove(req)
+        self.pending_frames -= remaining
+        if req.served > 0:
+            # only a partially-served head pins a carry bucket — dropping
+            # it must release the pin, or the next unrelated request would
+            # dispatch at the dead request's bucket
+            self._carry.pop(req.key, None)
+        if not q:
+            del self._queues[req.key]
+            self._carry.pop(req.key, None)
+
+    # ------------------------------------------------------------------
+    # Dispatch formation
+    # ------------------------------------------------------------------
+    def _select_key(self, ready) -> Optional[tuple]:
+        """The next key to dispatch: highest pending priority wins, FIFO
+        (head arrival order) within a priority level; keys whose session
+        has no pipeline-depth slack (``ready``) are skipped this round."""
+        best_key, best_rank = None, None
+        for key, q in self._queues.items():
+            if not q or not ready(q[0].session):
+                continue
+            rank = (-max(r.priority for r in q), q[0].seq)
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        return best_key
+
+    def next_dispatch(self, ready) -> Optional[Dispatch]:
+        """Form the next bucket-sized dispatch, or ``None`` if nothing is
+        pending for a ready session.  Consumes the taken frames from the
+        queues and updates the coalescing counters."""
+        key = self._select_key(ready)
+        if key is None:
+            return None
+        q = self._queues[key]
+        session = q[0].session
+        # a partially-served head pins the bucket its first chunk used, so
+        # clip tails never compile a second (smaller) program; otherwise
+        # size the bucket to everything pending for the key — coalesced
+        # traffic fills the largest legal bucket
+        bucket = self._carry.get(key)
+        if bucket is None:
+            bucket = session._bucket_for(self.pending_for(key))
+        tickets: List[Ticket] = []
+        slot = 0
+        while q and slot < bucket:
+            r = q[0]
+            take = min(r.n - r.served, bucket - slot)
+            tickets.append(Ticket(request=r, start=r.served, n=take, slot=slot))
+            r.served += take
+            slot += take
+            if r.served == r.n:
+                q.popleft()
+            else:
+                break  # bucket full mid-request — it stays at the head
+        if q and q[0].served > 0:
+            self._carry[key] = bucket
+        else:
+            self._carry.pop(key, None)
+        if not q:
+            del self._queues[key]
+        d = Dispatch(key=key, session=session, plan=tickets[0].request.plan,
+                     bucket=bucket, tickets=tickets)
+        self.pending_frames -= d.real
+        self.dispatches += 1
+        if len(d.requests) > 1:
+            self.coalesced_dispatches += 1
+        self.frames_dispatched += d.real
+        self.slots_dispatched += bucket
+        self.recent_dispatches.append({
+            "model": key[0],
+            "lr_shape": list(d.plan.lr_shape),
+            "dtype": key[2],
+            "bucket": bucket,
+            "frames": d.real,
+            "fill": d.fill,
+            "requests": len(d.requests),
+            "priority": max(t.request.priority for t in tickets),
+        })
+        return d
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Cumulative coalescing/queue counters.
+
+        ``mean_fill_ratio`` is real frames over bucket slots across every
+        dispatch — 1.0 means the coalescer padded nothing; ``padded_frames``
+        is the absolute slack.  ``coalesced_dispatches`` counts dispatches
+        that carried more than one request.
+        """
+        slots = self.slots_dispatched
+        return {
+            "submitted_requests": self.submitted_requests,
+            "submitted_frames": self.submitted_frames,
+            "pending_frames": self.pending_frames,
+            "peak_pending_frames": self.peak_pending_frames,
+            "dispatches": self.dispatches,
+            "coalesced_dispatches": self.coalesced_dispatches,
+            "frames_dispatched": self.frames_dispatched,
+            "slots_dispatched": slots,
+            "padded_frames": slots - self.frames_dispatched,
+            "mean_fill_ratio": self.frames_dispatched / slots if slots else 0.0,
+            "rejected": self.rejected,
+        }

@@ -1,0 +1,673 @@
+"""SRServer — the request/future serving front door over SRSessions.
+
+``SRSession.upscale`` is caller-batched and blocking: every request pays
+its own padded bucket and two concurrent half-bucket requests can never
+share a dispatch.  ``SRServer`` moves admission and batching into the
+engine, the way the block-streaming schedulers of ACNPU/BSRA own their
+datapath's work queue:
+
+* ``SRServer.open("abpn_x3", ...)`` hosts one or more named
+  :class:`~repro.engine.session.SRSession`\\ s (multi-model traffic routes
+  through each session's own ``PlanCache``/``PreparedStack`` machinery).
+* ``server.submit(frames, model=..., priority=...)`` validates and queues
+  a request and returns an :class:`SRFuture` immediately; requests that
+  share a ``(model, plan, dtype)`` key are COALESCED by the
+  :class:`~repro.engine.scheduler.MicroBatchScheduler` into bucket-sized
+  dispatches — concurrent small requests fill one power-of-two bucket with
+  real frames instead of each padding its own.
+* ``async for hr in server.stream(frames)`` serves frame-at-a-time live
+  video: each frame is submitted (a small lookahead keeps the coalescer
+  fed) and HR frames are yielded in order; concurrent streams share
+  dispatches.
+* ``max_inflight_frames`` bounds the queue (pending + dispatched frames);
+  at the bound, ``admission="block"`` drains the queue to make space and
+  ``admission="reject"`` raises
+  :class:`~repro.engine.scheduler.QueueFullError`.
+
+Execution is the PIPELINED drain loop that previously lived inside
+``SRSession``: each dispatch is assembled (host frames through the
+session's one reused staging buffer, device frames through a fused pad /
+concatenate), launched asynchronously, and completed in order, with up to
+``session.pipeline_depth`` dispatches in flight per session.  Latency,
+span and peak-inflight numbers are recorded on the owning session —
+``session.stats()`` means the same thing whether a batch arrived through
+``upscale``, ``submit`` or a stream.  Dispatch formation runs under one
+server lock, but device waits release it: ``SRFuture.result()`` from any
+thread drives the drain, and while one thread blocks on the device other
+threads' submits are admitted — and coalesce into the next dispatch.
+
+``SRSession.upscale`` is now a thin synchronous shim over
+``session.submit(frames).result()`` — routed through the server hosting
+the session (one scheduler and one lock govern all traffic into it), or
+through an embedded single-model server when none does — so the blocking
+API and the future API are the same code path.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.scheduler import (
+    Dispatch,
+    MicroBatchScheduler,
+    QueueFullError,
+    SchedRequest,
+)
+from repro.engine.session import SRSession
+
+__all__ = ["SRServer", "SRFuture", "QueueFullError"]
+
+ADMISSION_POLICIES = ("block", "reject")
+
+
+class SRFuture:
+    """The result handle ``SRServer.submit`` returns.
+
+    ``result()`` drives the server's drain loop until this request's
+    frames are served (so a single-threaded caller needs no background
+    worker), then returns the HR array in the request's original rank —
+    or re-raises the error that failed the dispatch.  Thread-safe: any
+    number of threads may wait; whoever gets the server lock drains,
+    the rest block until notified.
+    """
+
+    def __init__(self, server: "SRServer"):
+        self._server = server
+        self._cond = threading.Condition()
+        self._done = False
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self._callbacks = []
+
+    def done(self) -> bool:
+        return self._done
+
+    def _wait_done(self, timeout: Optional[float]) -> None:
+        """Drive the drain, then wait (bounded) for completion.
+
+        ``timeout`` bounds only the *wait* for another thread's drain to
+        finish the request — a drain this call performs itself runs to
+        completion.
+        """
+        if not self._done:
+            self._server._drain_until(self)
+        with self._cond:
+            if not self._done:
+                self._cond.wait(timeout)
+            if not self._done:
+                raise TimeoutError("request not complete within timeout")
+
+    def result(self, timeout: Optional[float] = None):
+        """The request's HR output (blocking; drives the server's drain),
+        or re-raises the error that failed the request."""
+        self._wait_done(timeout)
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        """The error that failed this request, or ``None`` (blocking; a
+        stored failure is RETURNED — even a ``TimeoutError`` raised by the
+        dispatch — while an unfinished wait raises ``TimeoutError``)."""
+        self._wait_done(timeout)
+        return self._exc
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` when the future resolves (immediately if it
+        already has).  Callbacks run on the draining thread, OUTSIDE the
+        server lock — a callback may submit follow-up work or wait on
+        other futures without deadlocking."""
+        with self._cond:
+            if not self._done:
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _finish(self, result=None, exc: Optional[BaseException] = None) -> None:
+        """Set the outcome and wake waiters.  Callbacks are NOT run here —
+        this executes under the server lock; the server runs
+        :meth:`_run_callbacks` after releasing it."""
+        with self._cond:
+            self._result = result
+            self._exc = exc
+            self._done = True
+            self._cond.notify_all()
+
+    def _run_callbacks(self) -> None:
+        with self._cond:
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+
+class _Inflight:
+    """One launched dispatch: the async HR handle plus its timing and
+    whether it staged through the session's shared host buffer."""
+
+    __slots__ = ("dispatch", "hr", "t0", "used_staging")
+
+    def __init__(self, dispatch: Dispatch, hr, t0: float, used_staging: bool):
+        self.dispatch = dispatch
+        self.hr = hr
+        self.t0 = t0
+        self.used_staging = used_staging
+
+
+class SRServer:
+    """One serving endpoint hosting named sessions behind a micro-batcher.
+
+    ``sessions`` maps model names to :class:`SRSession`\\ s (a bare session
+    is accepted and hosted under its model name).  ``default_model`` is the
+    target when ``submit`` is called without ``model=`` (defaults to the
+    first session).  ``max_inflight_frames`` bounds pending + dispatched
+    frames; ``admission`` picks the full-queue behavior (``"block"`` drains
+    to make space, ``"reject"`` raises :class:`QueueFullError`).
+    """
+
+    def __init__(
+        self,
+        sessions: Union[SRSession, Mapping[str, SRSession]],
+        *,
+        default_model: Optional[str] = None,
+        max_inflight_frames: Optional[int] = None,
+        admission: str = "block",
+    ):
+        if isinstance(sessions, SRSession):
+            sessions = {sessions.model or "default": sessions}
+        sessions = dict(sessions)
+        if not sessions:
+            raise ValueError("SRServer needs at least one session")
+        for name, s in sessions.items():
+            if not isinstance(name, str):
+                raise ValueError(f"model name {name!r} must be a string")
+            if not isinstance(s, SRSession):
+                raise ValueError(
+                    f"model {name!r} must map to an SRSession, got {type(s).__name__}"
+                )
+        if max_inflight_frames is not None and max_inflight_frames < 1:
+            raise ValueError(
+                f"max_inflight_frames={max_inflight_frames} must be >= 1 "
+                "(or None for an unbounded queue)"
+            )
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"admission {admission!r} not in {ADMISSION_POLICIES}"
+            )
+        if default_model is None:
+            default_model = next(iter(sessions))
+        if default_model not in sessions:
+            raise ValueError(
+                f"default_model {default_model!r} not among hosted models "
+                f"{sorted(sessions)}"
+            )
+        self._sessions = sessions
+        self._default = default_model
+        self.max_inflight_frames = max_inflight_frames
+        self.admission = admission
+        # hosted sessions route their own submit()/upscale() through THIS
+        # server, so one lock + one scheduler govern all traffic into the
+        # session; a SECOND front door over the same mutable session state
+        # (staging buffer, caches, stats) would race it, so hosting an
+        # already-served session is an error rather than a silent hazard
+        for s in sessions.values():
+            if s._server is None:
+                s._server = self
+            elif s._server is not self:
+                raise ValueError(
+                    "session is already served by another SRServer (its "
+                    "upscale()/submit() traffic routes there); host each "
+                    "session in exactly one server — construct the hosting "
+                    "server before serving through the session directly"
+                )
+        self._sched = MicroBatchScheduler()
+        # one lock guards scheduler + inflight state; the condition lets a
+        # thread RELEASE it while blocking on the device (completions in
+        # progress are counted in _completing and waited on via the cv),
+        # so concurrent submits are admitted — and coalesce — while a
+        # drain is waiting on compute
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._completing = 0  # dispatches being block_until_ready'd off-lock
+        self._inflight: Deque[_Inflight] = deque()
+        self._inflight_frames = 0  # dispatched, not yet complete (real)
+        self._session_inflight: Dict[int, int] = {}
+        self._window_start: Dict[int, float] = {}
+        # per-session count of in-flight dispatches staged through the
+        # session's SHARED host buffer: while one is outstanding, the next
+        # host dispatch stages through a fresh buffer instead — the H2D
+        # copy of dispatch t may still be reading the buffer when t+1
+        # assembles (a hazard only on overlapped host dispatches)
+        self._staging_busy: Dict[int, int] = {}
+        # futures finished inside a locked region, whose done-callbacks
+        # still need to run once the lock is released
+        self._just_finished: list = []
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def open(
+        cls,
+        *models: str,
+        default_model: Optional[str] = None,
+        max_inflight_frames: Optional[int] = None,
+        admission: str = "block",
+        seed: int = 0,
+        **session_kwargs,
+    ) -> "SRServer":
+        """Open a server hosting registered SR models by name.
+
+        Each name resolves through ``repro.models.registry``
+        (``list_sr_models()`` enumerates them); ``session_kwargs``
+        (backend, precision, pipeline_depth, max_bucket, ...) apply to
+        every hosted session.  With no names, hosts the paper's
+        ``abpn_x3``.
+        """
+        names = models or ("abpn_x3",)
+        sessions = {
+            name: SRSession.open(name, seed=seed, **session_kwargs)
+            for name in names
+        }
+        return cls(
+            sessions,
+            default_model=default_model,
+            max_inflight_frames=max_inflight_frames,
+            admission=admission,
+        )
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    @property
+    def models(self) -> Tuple[str, ...]:
+        return tuple(self._sessions)
+
+    def session(self, model: Optional[str] = None) -> SRSession:
+        """The hosted session serving ``model`` (default model if None)."""
+        return self._sessions[self._resolve_model(model)]
+
+    def scheduler_stats(self) -> dict:
+        """The micro-batcher's coalescing/queue counters plus the server's
+        in-flight state (see ``MicroBatchScheduler.stats``)."""
+        with self._lock:
+            stats = self._sched.stats()
+            stats["inflight_dispatches"] = len(self._inflight)
+            stats["inflight_frames"] = self._inflight_frames
+            stats["recent_dispatches"] = list(self._sched.recent_dispatches)
+        return stats
+
+    def stats(self) -> dict:
+        """Scheduler counters plus each hosted session's serving stats."""
+        return {
+            "scheduler": self.scheduler_stats(),
+            "models": {
+                name: dict(s.stats()) for name, s in self._sessions.items()
+            },
+        }
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def _resolve_model(self, model: Optional[str]) -> str:
+        name = self._default if model is None else model
+        if name not in self._sessions:
+            raise ValueError(
+                f"unknown model {name!r}; this server hosts {sorted(self._sessions)}"
+            )
+        return name
+
+    def submit_for(self, session: SRSession, frames, *, priority: int = 0) -> SRFuture:
+        """Submit addressed by hosted session identity rather than name —
+        what ``SRSession.submit`` calls on its hosting server."""
+        for name, s in self._sessions.items():
+            if s is session:
+                return self.submit(frames, model=name, priority=priority)
+        raise ValueError("session is not hosted by this server")
+
+    def submit(self, frames, *, model: Optional[str] = None, priority: int = 0) -> SRFuture:
+        """Queue a request; returns its :class:`SRFuture` immediately.
+
+        ``frames`` is any rank ``upscale`` accepts (``(H, W, C)``,
+        ``(T, H, W, C)``, ``(B, T, H, W, C)``); validation (array-ness,
+        numeric dtype, rank, channel count) happens HERE, synchronously,
+        so malformed input fails with a clear ``ValueError`` instead of
+        surfacing from plan derivation or compilation.  Higher
+        ``priority`` keys dispatch first.  The actual dispatch runs when
+        the drain loop next turns over (``result()``/``flush()``/a
+        concurrent waiter), coalescing whatever compatible requests are
+        queued by then.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        name = self._resolve_model(model)
+        session = self._sessions[name]
+        flat, ndim, lead = session.flatten_request(frames)
+        shape = tuple(int(x) for x in flat.shape[1:])
+        plan = session.plan_for(shape)
+        dtype = session.serving_dtype(flat.dtype)
+        fut = SRFuture(self)
+        n = int(flat.shape[0])
+        if n == 0:
+            out = jnp.zeros((0, *plan.hr_shape), session.output_dtype(plan, dtype))
+            if ndim == 5:
+                out = out.reshape(*lead, *plan.hr_shape)
+            with self._lock:
+                self._sched.note_empty_request()
+            fut._finish(result=out)
+            return fut
+        req = SchedRequest(
+            seq=0,  # assigned under the lock below
+            key=(name, plan, dtype.name),
+            session=session,
+            plan=plan,
+            flat=flat,
+            n=n,
+            priority=int(priority),
+            future=fut,
+            ndim=ndim,
+            lead=lead,
+        )
+        self._admit(req)
+        return fut
+
+    def _admit(self, req: SchedRequest) -> None:
+        bound = self.max_inflight_frames
+        if bound is not None and req.n > bound:
+            raise ValueError(
+                f"request of {req.n} frames can never fit "
+                f"max_inflight_frames={bound}"
+            )
+        while True:
+            with self._lock:
+                queued = self._sched.pending_frames + self._inflight_frames
+                if bound is None or queued + req.n <= bound:
+                    req.seq = self._sched.next_seq()
+                    self._sched.add(req)
+                    return
+                if self.admission == "reject":
+                    self._sched.note_rejected()
+                    raise QueueFullError(
+                        f"queue full: {queued} frames in flight + {req.n} "
+                        f"requested > max_inflight_frames={bound}"
+                    )
+                # a full queue implies drainable work (checked under the
+                # SAME lock as the fullness read — another thread may have
+                # drained it by the time our step runs, which is fine)
+                if not (self._sched.has_pending() or self._inflight
+                        or self._completing):
+                    raise RuntimeError(
+                        "queue full but no work to drain — inconsistent "
+                        "scheduler state"
+                    )
+            # block policy: make space by draining the queue (outside the
+            # lock — _step synchronizes itself), then re-check admission
+            self._step()
+
+    # ------------------------------------------------------------------
+    # The drain loop
+    # ------------------------------------------------------------------
+    def flush(self) -> None:
+        """Drain everything: dispatch all pending frames and complete all
+        in-flight dispatches (their futures resolve)."""
+        while self._step():
+            pass
+
+    def _drain_until(self, fut: SRFuture) -> None:
+        while not fut.done():
+            if not self._step():
+                if fut.done():
+                    # a concurrent thread finalized the future between our
+                    # done() check and _step() taking the lock — fine
+                    return
+                raise RuntimeError(
+                    "future is not done but the server has no pending "
+                    "work — was it issued by this server?"
+                )
+
+    def _session_ready(self, session: SRSession) -> bool:
+        return self._session_inflight.get(id(session), 0) < session.pipeline_depth
+
+    def _step(self) -> bool:
+        """One drain turn: launch the next dispatch if a session has
+        pipeline-depth slack, else complete the oldest in-flight one.
+        Returns False when there is nothing left to do.
+
+        Synchronizes itself: launches (assembly + async dispatch + any
+        cache-miss compile) run under the lock; the device wait of a
+        completion runs with the lock RELEASED, counted in
+        ``_completing`` so other threads know progress is in flight —
+        they wait on the condition instead of reporting starvation, and
+        their submits are admitted (and coalesce) meanwhile.  Futures
+        finished inside a locked region run their done-callbacks here,
+        after the lock is released.  (Known trade vs the old in-session
+        loop: a depth-1 session no longer stages chunk t+1 during chunk
+        t's device wait — the next dispatch assembles only after the
+        completion frees depth slack.)
+        """
+        inf = None
+        with self._cv:
+            d = self._sched.next_dispatch(self._session_ready)
+            if d is not None:
+                self._launch(d)  # a launch FAILURE finishes futures
+                finished = self._take_finished()
+            elif self._inflight:
+                inf = self._inflight.popleft()
+                self._completing += 1
+                finished = []
+            elif self._completing:
+                # another thread is waiting on a completion — progress is
+                # theirs to make; sleep until its finalize wakes us
+                self._cv.wait()
+                return True
+            else:
+                return False
+        if inf is None:
+            self._run_finished(finished)
+            return True
+        error: Optional[BaseException] = None
+        try:
+            jax.block_until_ready(inf.hr)  # off-lock device wait
+        except BaseException as e:  # deferred device-side failure
+            error = e
+        with self._cv:
+            try:
+                self._finalize_complete(inf, error)
+            finally:
+                self._completing -= 1
+                self._cv.notify_all()
+            finished = self._take_finished()
+        self._run_finished(finished)
+        return True
+
+    def _take_finished(self) -> list:
+        finished, self._just_finished = self._just_finished, []
+        return finished
+
+    @staticmethod
+    def _run_finished(finished: list) -> None:
+        for fut in finished:
+            fut._run_callbacks()
+
+    def _launch(self, d: Dispatch) -> None:
+        session: SRSession = d.session
+        try:
+            # executor resolution may compile — on a dummy, before the
+            # timed dispatch starts, exactly like the pre-server path
+            entry, _ = session.executor_for(d.plan, d.bucket, np.dtype(d.key[2]))
+            slab, used_staging = self._assemble(d, entry.donates)
+            t0 = time.perf_counter()
+            hr = entry.fn(slab)  # async dispatch: returns immediately
+            session._dispatch_ms.append((time.perf_counter() - t0) * 1e3)
+        except BaseException as e:
+            self._fail_dispatch(d, e)
+            return
+        sid = id(session)
+        count = self._session_inflight.get(sid, 0)
+        if count == 0:
+            self._window_start[sid] = t0
+        self._session_inflight[sid] = count + 1
+        session._peak_inflight = max(session._peak_inflight, count + 1)
+        self._inflight_frames += d.real
+        if used_staging:
+            self._staging_busy[sid] = self._staging_busy.get(sid, 0) + 1
+        self._inflight.append(_Inflight(d, hr, t0, used_staging))
+
+    def _assemble(self, d: Dispatch, donates: bool):
+        """Build the bucket-sized device slab from the dispatch's tickets;
+        returns ``(slab, used_shared_staging)``.
+
+        All-host tickets go through the session's reused staging buffer
+        (zero fresh bucket allocations per ragged dispatch) and one
+        ``jax.device_put`` — unless an in-flight dispatch is still using
+        that buffer (overlapped host dispatches), in which case a fresh
+        buffer keeps the earlier H2D copy safe.  Device tickets use a
+        single fused ``jnp.pad`` or ``jnp.concatenate``.  Under donation
+        the returned slab is always server-owned: a full-cover slice that
+        would hand back a caller's own array object is copied first.
+        """
+        session: SRSession = d.session
+        tickets = d.tickets
+        real = d.real
+        if all(isinstance(t.request.flat, np.ndarray) for t in tickets):
+            first = tickets[0]
+            if len(tickets) == 1 and real == d.bucket:
+                src = first.request.flat
+                return jax.device_put(src[first.start:first.start + first.n]), False
+            frame_shape = first.request.flat.shape[1:]
+            dtype = first.request.flat.dtype
+            shared = not self._staging_busy.get(id(session), 0)
+            if shared:
+                buf = session._staging_for(d.bucket, frame_shape, dtype)
+            else:
+                buf = np.zeros((d.bucket, *frame_shape), dtype)
+            for t in tickets:
+                buf[t.slot:t.slot + t.n] = t.request.flat[t.start:t.start + t.n]
+            buf[real:] = 0
+            return jax.device_put(buf), shared
+        pieces = [t.request.flat[t.start:t.start + t.n] for t in tickets]
+        if len(pieces) == 1:
+            chunk = pieces[0]
+            if isinstance(chunk, np.ndarray):
+                chunk = jnp.asarray(chunk)
+            if real < d.bucket:
+                pad = [(0, d.bucket - real)] + [(0, 0)] * (chunk.ndim - 1)
+                return jnp.pad(chunk, pad), False
+            if donates and chunk is tickets[0].request.flat:
+                # a full-cover slice is the SAME array object in jax;
+                # donating it would consume the caller's buffer
+                chunk = jnp.array(chunk)
+            return chunk, False
+        if real < d.bucket:
+            pieces.append(jnp.zeros((d.bucket - real, *pieces[0].shape[1:]),
+                                    pieces[0].dtype))
+        return jnp.concatenate(pieces, axis=0), False
+
+    def _finalize_complete(self, inf: _Inflight,
+                           error: Optional[BaseException]) -> None:
+        """Bookkeeping for a completed (or device-failed) dispatch — runs
+        under the lock, after the off-lock ``block_until_ready``."""
+        d, session = inf.dispatch, inf.dispatch.session
+        sid = id(session)
+        now = time.perf_counter()
+        self._inflight_frames -= d.real
+        self._session_inflight[sid] -= 1
+        if self._session_inflight[sid] == 0:
+            session._span_s += now - self._window_start.pop(sid)
+        if inf.used_staging:
+            self._staging_busy[sid] -= 1
+        if error is not None:
+            self._fail_dispatch(d, error)
+            return
+        session._complete_ms.append((now - inf.t0) * 1e3)
+        session._frames += d.real
+        for t in d.tickets:
+            r = t.request
+            if r.failed:
+                continue
+            # keyed by the ticket's offset: concurrent drains may finalize
+            # a long request's dispatches out of order
+            r.pieces.append((t.start, inf.hr[t.slot:t.slot + t.n]))
+            r.completed += t.n
+            if r.completed == r.n:
+                self._finish_request(r)
+
+    def _finish_request(self, req: SchedRequest) -> None:
+        pieces = [p for _, p in sorted(req.pieces, key=lambda sp: sp[0])]
+        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(
+            pieces, axis=0)
+        req.pieces = []
+        if req.ndim == 3:
+            out = out[0]
+        elif req.ndim == 5:
+            out = out.reshape(*req.lead, *req.plan.hr_shape)
+        req.future._finish(result=out)
+        self._just_finished.append(req.future)
+
+    def _fail_dispatch(self, d: Dispatch, exc: BaseException) -> None:
+        """A dispatch failed (build, launch or device error): fail every
+        involved request's future and drop their queued remainders — other
+        keys keep serving."""
+        for r in d.requests:
+            if r.failed:
+                continue
+            r.failed = True
+            self._sched.drop(r)
+            r.future._finish(exc=exc)
+            self._just_finished.append(r.future)
+
+    # ------------------------------------------------------------------
+    # Streaming
+    # ------------------------------------------------------------------
+    async def stream(self, frames, *, model: Optional[str] = None,
+                     priority: int = 0, lookahead: int = 4):
+        """Serve an iterable of frames one at a time; yields HR frames in
+        order (an async generator — ``async for hr in server.stream(...)``).
+
+        ``lookahead`` frames are submitted ahead of the one being awaited,
+        which keeps the micro-batcher's queue non-empty: a single stream
+        coalesces its own lookahead window into full buckets, and
+        concurrent streams share dispatches with each other.  Waiting
+        happens off the event loop (``asyncio.to_thread``), so multiple
+        streams interleave.
+        """
+        import asyncio
+
+        pending: Deque[SRFuture] = deque()
+        it = iter(frames)
+        exhausted = False
+        while pending or not exhausted:
+            while not exhausted and len(pending) < max(1, int(lookahead)):
+                try:
+                    frame = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                # submit off the loop too: with a full bounded queue and
+                # admission="block" it drains (device waits) until space
+                pending.append(await asyncio.to_thread(
+                    self.submit, frame, model=model, priority=priority))
+            if pending:
+                fut = pending.popleft()
+                yield await asyncio.to_thread(fut.result)
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Drain outstanding work and refuse further submits."""
+        self.flush()
+        self._closed = True
+
+    def __enter__(self) -> "SRServer":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

@@ -53,14 +53,23 @@ a new dtype never pays a silent mid-serving compile.
 ``VideoStream`` (stream.py) is now a deprecated shim over a session pinned
 to one plan, one bucket and ``pipeline_depth=1`` (the legacy blocking
 behavior).
+
+Since the :class:`~repro.engine.server.SRServer` redesign, the session no
+longer owns a serving loop of its own: :meth:`SRSession.submit` queues a
+request on an embedded single-model server (which runs the pipelined
+dispatch/coalescing drain), and :meth:`SRSession.upscale` is a thin
+synchronous shim over ``submit(frames).result()``.  The session keeps what
+is per-model state: the plan/executor caches, the prepared weight stacks,
+the staging buffer and the latency/throughput stats (recorded identically
+whether a batch arrived through ``upscale``, ``submit`` or a stream).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict, deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -287,7 +296,15 @@ class SRSession:
         if max_bucket is not None and max_bucket < 1:
             raise ValueError(f"max_bucket={max_bucket} must be >= 1")
         if pipeline_depth < 1:
-            raise ValueError(f"pipeline_depth={pipeline_depth} must be >= 1")
+            raise ValueError(
+                f"pipeline_depth={pipeline_depth} must be >= 1 "
+                "(1 = blocking, 2 = double-buffered dispatch)"
+            )
+        if cache_capacity < 1:
+            raise ValueError(
+                f"cache_capacity={cache_capacity} must be >= 1 "
+                "(the session needs at least one live compiled executor)"
+            )
         self.layers = layers
         self.model = model
         self.backend = backend
@@ -329,6 +346,10 @@ class SRSession:
         self._span_s = 0.0
         self._frames = 0
         self._peak_inflight = 0
+        # the SRServer submit()/upscale() serve through: set by the first
+        # server that hosts this session, else an embedded single-model
+        # server created lazily on first submit
+        self._server = None
 
     # ------------------------------------------------------------------
     # Constructors
@@ -443,7 +464,13 @@ class SRSession:
         (a pinned session never accumulates shapes, so pins are safe)."""
         memo[key] = value
         while len(memo) > self._memo_cap:
-            memo.pop(next(iter(memo)))
+            try:
+                memo.pop(next(iter(memo)))
+            except (KeyError, StopIteration, RuntimeError):
+                # concurrent server submits resolve plans outside the
+                # server lock; losing the race for the oldest key just
+                # means another thread evicted it — re-check the cap
+                continue
 
     @staticmethod
     def serving_dtype(dtype) -> np.dtype:
@@ -568,46 +595,96 @@ class SRSession:
             bucket = min(bucket, cap)
         return bucket
 
-    def upscale(self, frames) -> jax.Array:
-        """Super-resolve frames of any supported rank.
+    def flatten_request(self, frames) -> Tuple[object, int, Optional[tuple]]:
+        """Validate a request and flatten it to ``(N, H, W, C)``.
 
-        ``(H, W, C)`` -> ``(sH, sW, C)``; ``(T, H, W, C)`` ->
-        ``(T, sH, sW, C)``; ``(B, T, H, W, C)`` -> ``(B, T, sH, sW, C)``.
-        The flattened frame batch is served in bucket-sized chunks through
-        the pipelined dispatcher (up to ``pipeline_depth`` chunks in
-        flight); padded outputs are trimmed and only real frames count in
-        :meth:`stats`.  Host (numpy) input stays on the host and is staged
-        chunk-by-chunk with ``jax.device_put`` one chunk ahead of the
-        compute, so the H2D copy of chunk *t+1* overlaps with chunk *t*.
-        The caller's array is never donated — only session-staged slabs.
+        Returns ``(flat, ndim, lead)`` — the flat frame batch (host numpy
+        stays host, already cast to the serving dtype; device arrays pass
+        through), the caller's original rank, and the ``(B, T)`` leading
+        shape for rank-5 input.  Malformed input fails HERE with a clear
+        ``ValueError`` naming the expected ``(..., H, W, C)`` layout —
+        non-array objects, non-numeric dtypes, bad ranks and channel
+        counts never reach plan derivation or the compiler.
         """
-        host = isinstance(frames, np.ndarray)
-        if host:
+        if isinstance(frames, (np.ndarray, jax.Array)):
+            arr = frames
+        else:
+            try:
+                arr = np.asarray(frames)
+            except Exception as e:
+                raise ValueError(
+                    "expected an array of frames with shape (..., H, W, C); "
+                    f"got {type(frames).__name__}"
+                ) from e
+        dtype = arr.dtype
+        if not (jnp.issubdtype(dtype, jnp.floating)
+                or jnp.issubdtype(dtype, jnp.integer)
+                or dtype == np.bool_):
+            raise ValueError(
+                "expected numeric frames with shape (..., H, W, C); "
+                f"got dtype {dtype} (from {type(frames).__name__})"
+            )
+        if isinstance(arr, np.ndarray):
             # cast to the dtype jax will actually serve in (float64 ->
             # float32 without x64) BEFORE keying/staging, so one program
             # serves both spellings and chunks match the compiled dtype
-            arr = frames.astype(self.serving_dtype(frames.dtype), copy=False)
-        else:
-            arr = jnp.asarray(frames)
+            arr = arr.astype(self.serving_dtype(dtype), copy=False)
+        lead: Optional[tuple] = None
         if arr.ndim == 3:
             flat = arr[None]
         elif arr.ndim == 4:
             flat = arr
         elif arr.ndim == 5:
+            lead = arr.shape[:2]
             flat = arr.reshape(arr.shape[0] * arr.shape[1], *arr.shape[2:])
         else:
             raise ValueError(
                 "expected (H, W, C), (T, H, W, C) or (B, T, H, W, C) frames, "
-                f"got shape {arr.shape}"
+                f"got shape {tuple(arr.shape)}"
             )
-        H, W, C = flat.shape[1:]
-        plan = self.plan_for((int(H), int(W), int(C)))
-        hr = self._serve_flat(plan, flat)
-        if arr.ndim == 3:
-            return hr[0]
-        if arr.ndim == 5:
-            return hr.reshape(arr.shape[0], arr.shape[1], *plan.hr_shape)
-        return hr
+        ci = getattr(self.layers[0], "ci", None)
+        if ci is not None and flat.shape[-1] != ci:
+            raise ValueError(
+                f"frames have {flat.shape[-1]} channels in the trailing "
+                f"(..., H, W, C) axis; this session's layer stack expects "
+                f"C={ci}"
+            )
+        return flat, arr.ndim, lead
+
+    def submit(self, frames, *, priority: int = 0):
+        """Queue a request on the session's embedded server; returns an
+        :class:`~repro.engine.server.SRFuture` immediately.
+
+        The request dispatches when the server's drain loop next turns
+        over (``future.result()`` drives it), coalescing with any other
+        queued requests that share this session's ``(plan, dtype)`` key.
+        If an :class:`~repro.engine.server.SRServer` hosts this session,
+        the request goes through THAT server (one scheduler + one lock
+        govern all traffic into the session); otherwise an embedded
+        single-model server is created on first use.
+        """
+        if self._server is None:
+            from repro.engine.server import SRServer  # lazy: avoids a cycle
+
+            # (SRServer.__init__ also registers itself on the session —
+            # the assignment is the same object, stated explicitly)
+            self._server = SRServer({self.model or "session": self})
+        return self._server.submit_for(self, frames, priority=priority)
+
+    def upscale(self, frames) -> jax.Array:
+        """Super-resolve frames of any supported rank (blocking).
+
+        ``(H, W, C)`` -> ``(sH, sW, C)``; ``(T, H, W, C)`` ->
+        ``(T, sH, sW, C)``; ``(B, T, H, W, C)`` -> ``(B, T, sH, sW, C)``.
+        A thin synchronous shim over ``submit(frames).result()``: the
+        flattened batch is served in bucket-sized dispatches through the
+        server's pipelined drain (up to ``pipeline_depth`` in flight;
+        host numpy input staged per chunk via the one reused staging
+        buffer + ``jax.device_put``), padded outputs are trimmed, and only
+        real frames count in :meth:`stats`.  The caller's array is never
+        donated — only server-staged slabs.
+        """
+        return self.submit(frames).result()
 
     def serve_batch(
         self, plan: SRPlan, frames: jax.Array, real_frames: Optional[int] = None
@@ -635,89 +712,13 @@ class SRSession:
         return hr
 
     def _staging_for(self, bucket: int, frame_shape, dtype) -> np.ndarray:
-        """One reusable host buffer for ragged-tail padding (no fresh
-        bucket-sized allocation per tail)."""
+        """One reusable host buffer for staging ragged/coalesced host
+        dispatches (no fresh bucket-sized allocation per tail); the
+        server's assembler fills it and ships it with ``device_put``."""
         key = (bucket, tuple(frame_shape), np.dtype(dtype).str)
         if self._staging is None or self._staging[0] != key:
             self._staging = (key, np.zeros((bucket, *frame_shape), dtype))
         return self._staging[1]
-
-    def _stage_chunk(
-        self, flat, start: int, bucket: int, total: int, donate: bool
-    ) -> Tuple[jax.Array, int]:
-        """Chunk ``[start, start+bucket)`` of the flat batch, padded to the
-        bucket and placed on device, plus its real-frame count.
-
-        Host (numpy) input: the slice (tail: copied into the one reused
-        staging buffer — ``jnp.zeros`` + ``concatenate`` per ragged tail
-        is gone) is shipped with ``jax.device_put``, which returns
-        immediately — the H2D copy overlaps with whatever the device is
-        computing.  Device input: the tail is padded with a single
-        ``jnp.pad`` (one fused op, same compiled program for every tail of
-        this bucket).  Under donation the returned slab is always
-        session-owned — if slicing would hand back the caller's own array
-        object, it is copied first.
-        """
-        n = min(bucket, total - start)
-        if isinstance(flat, np.ndarray):
-            if n < bucket:
-                buf = self._staging_for(bucket, flat.shape[1:], flat.dtype)
-                buf[:n] = flat[start : start + n]
-                buf[n:] = 0
-                return jax.device_put(buf), n
-            return jax.device_put(flat[start : start + bucket]), n
-        chunk = flat[start : start + n]
-        if n < bucket:
-            pad = [(0, bucket - n)] + [(0, 0)] * (chunk.ndim - 1)
-            return jnp.pad(chunk, pad), n
-        if donate and chunk is flat:
-            # a full-cover slice is the SAME array object in jax; donating
-            # it would consume the caller's buffer — take ownership first
-            chunk = jnp.array(chunk)
-        return chunk, n
-
-    def _serve_flat(self, plan: SRPlan, flat) -> jax.Array:
-        N = int(flat.shape[0])
-        if N == 0:
-            return jnp.zeros(
-                (0, *plan.hr_shape), self.output_dtype(plan, flat.dtype)
-            )
-        bucket = self._bucket_for(N)
-        # resolve the executor ONCE per request — a cache miss compiles on
-        # a dummy here, before the timed serving span starts
-        entry, _ = self.executor_for(plan, bucket, flat.dtype)
-        depth = self.pipeline_depth
-        starts = list(range(0, N, bucket))
-        inflight: Deque[Tuple[jax.Array, int, float]] = deque()
-        outs: List[jax.Array] = []
-
-        def complete_oldest() -> None:
-            hr, n, t0 = inflight.popleft()
-            jax.block_until_ready(hr)
-            self._complete_ms.append((time.perf_counter() - t0) * 1e3)
-            self._frames += n
-            outs.append(hr[:n] if n != hr.shape[0] else hr)
-
-        t_span = time.perf_counter()
-        staged = self._stage_chunk(flat, starts[0], bucket, N, entry.donates)
-        for j in range(len(starts)):
-            chunk, n = staged
-            t0 = time.perf_counter()
-            hr = entry.fn(chunk)  # async dispatch: returns immediately
-            self._dispatch_ms.append((time.perf_counter() - t0) * 1e3)
-            inflight.append((hr, n, t0))
-            self._peak_inflight = max(self._peak_inflight, len(inflight))
-            if j + 1 < len(starts):
-                # stage the NEXT slab while the device chews on this one
-                staged = self._stage_chunk(
-                    flat, starts[j + 1], bucket, N, entry.donates
-                )
-            while len(inflight) >= depth:
-                complete_oldest()
-        while inflight:
-            complete_oldest()
-        self._span_s += time.perf_counter() - t_span
-        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
     # ------------------------------------------------------------------
     # Introspection

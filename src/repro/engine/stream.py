@@ -22,7 +22,12 @@ The shim pins ``pipeline_depth=1`` and ``donate_frames=False``: every
 batch blocks before the next dispatches and caller arrays are never
 consumed — exactly the legacy driver's behavior.  Migrate to
 ``SRSession`` (``pipeline_depth=2`` default) for the overlapped dispatch
-path; see the README "Serving pipeline" section.
+path, or to :class:`~repro.engine.server.SRServer` for the request/future
+front door (``submit``/``stream`` + cross-request micro-batching); see the
+README "Serving architecture" section.  The pinned session serves through
+the same server drain as everyone else — ``run`` is ``upscale`` is
+``submit().result()`` — so this shim keeps benefiting from engine fixes
+without owning any serving logic.
 """
 
 from __future__ import annotations

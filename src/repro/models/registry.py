@@ -23,7 +23,13 @@ from typing import Callable, Dict, Sequence, Tuple
 from repro.models import encdec, lm, mamba_lm, zamba
 from repro.models.abpn import ABPNConfig, init_abpn
 
-__all__ = ["get_model", "get_sr_model", "register_sr_model", "SRModelSpec"]
+__all__ = [
+    "get_model",
+    "get_sr_model",
+    "list_sr_models",
+    "register_sr_model",
+    "SRModelSpec",
+]
 
 _FAMILY = {
     "dense": lm,
@@ -82,13 +88,18 @@ def register_sr_model(
     return spec
 
 
+def list_sr_models() -> Tuple[str, ...]:
+    """Canonical names of every registered SR model (aliases excluded) —
+    what ``SRServer.open`` / ``SRSession.open`` accept."""
+    return tuple(sorted({s.name for s in _SR_MODELS.values()}))
+
+
 def get_sr_model(name: str) -> SRModelSpec:
     try:
         return _SR_MODELS[name]
     except KeyError:
-        canonical = sorted({s.name for s in _SR_MODELS.values()})
         raise ValueError(
-            f"unknown SR model {name!r}; available: {canonical}"
+            f"unknown SR model {name!r}; available: {list(list_sr_models())}"
         ) from None
 
 
