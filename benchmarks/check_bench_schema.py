@@ -22,6 +22,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from engine_throughput import (  # noqa: E402
+    AUTOTUNE_CONFIG_KEYS,
+    AUTOTUNE_KEYS,
     BATCH_KEYS,
     MODE_KEYS,
     PIPELINE_KEYS,
@@ -76,6 +78,30 @@ def check_record(rec: dict) -> list:
             "server.coalesced must not dispatch MORE than solo serving "
             f"(coalesced {coal_d} vs solo {solo_d} per burst)"
         )
+    tuned = rec.get("autotune", {})
+    _require(tuned, AUTOTUNE_KEYS, "autotune", errors)
+    configs = tuned.get("configs", [])
+    if not configs:
+        errors.append("autotune.configs must list at least one swept config")
+    for i, t in enumerate(configs):
+        _require(t, AUTOTUNE_CONFIG_KEYS, f"autotune.configs[{i}]", errors)
+        # the tuner's hard guarantee: the tuned schedule NEVER regresses
+        # below the default (the default candidate is always measured)
+        sp = t.get("speedup")
+        if sp is not None and sp < 1.0:
+            errors.append(
+                f"autotune.configs[{i}] (batch {t.get('batch')}): tuned "
+                f"schedule regressed below default (speedup {sp} < 1.0)"
+            )
+        frac = t.get("achieved_fraction")
+        if frac is not None and frac <= 0:
+            errors.append(
+                f"autotune.configs[{i}]: achieved_fraction {frac} must be "
+                "positive (roofline prediction or measurement is broken)"
+            )
+    depth = rec.get("pipeline", {}).get("tuned_depth")
+    if depth is not None and not 1 <= depth <= 4:
+        errors.append(f"pipeline.tuned_depth {depth} outside the legal 1..4")
     return errors
 
 
@@ -93,9 +119,15 @@ def main(argv) -> int:
             for e in errors:
                 print(f"  - {e}")
         else:
+            tuned_best = max(
+                (t["speedup"] for t in rec["autotune"]["configs"]),
+                default=0.0,
+            )
             print(f"{path}: ok "
                   f"(pipelined x{rec['pipeline']['speedup']} vs sync, "
+                  f"tuned_depth={rec['pipeline']['tuned_depth']}, "
                   f"coalesced x{rec['server']['speedup']} vs solo, "
+                  f"autotune best x{tuned_best}, "
                   f"bit_exact={rec['pipeline']['bit_exact']})")
     return status
 

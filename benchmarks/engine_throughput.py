@@ -31,6 +31,16 @@ Per-request outputs are asserted bit-exact across the two modes; the
 record keeps each mode's dispatch count and mean bucket fill ratio plus
 the coalesced-vs-solo speedup.
 
+The ``autotune`` section runs the roofline-guided schedule autotuner
+(``engine.autotune``) per request batch size: candidates are pruned
+analytically, survivors compiled + measured, and each config reports the
+winning schedule, its predicted-vs-measured time (achieved fraction of
+roofline) and the default-vs-tuned speedup (>= 1 by construction — the
+schema checker fails CI if a tuned schedule ever regresses).  The
+``pipeline`` section records the autotuner's ``tuned_depth`` verdict on
+the sync-vs-pipelined question (depth 1 on CPU, where overlap buys
+nothing).
+
     PYTHONPATH=src python benchmarks/engine_throughput.py            # CSV rows
     PYTHONPATH=src python benchmarks/engine_throughput.py --json    # + BENCH_engine.json
     PYTHONPATH=src python benchmarks/engine_throughput.py --quick   # CI smoke sizes
@@ -60,7 +70,7 @@ DEFAULT_BATCHES = (1, 4, 8)
 RECORD_KEYS = (
     "bench", "backend", "precision", "vertical_policy", "lr_shape",
     "band_rows", "jax_backend", "platform", "batch", "cache", "pipeline",
-    "roofline", "server",
+    "roofline", "server", "autotune",
 )
 BATCH_KEYS = (
     "frames_per_s", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
@@ -68,7 +78,7 @@ BATCH_KEYS = (
 )
 PIPELINE_KEYS = (
     "clip_frames", "bucket", "chunks", "depth", "reps", "bit_exact",
-    "sync", "pipelined", "speedup",
+    "sync", "pipelined", "speedup", "tuned_depth",
 )
 MODE_KEYS = (
     "frames_per_s", "p50_ms", "p99_ms", "mean_ms", "dispatch_mean_ms",
@@ -85,6 +95,15 @@ SERVER_KEYS = (
 SERVER_MODE_KEYS = (
     "frames_per_s", "dispatches_per_burst", "mean_fill_ratio", "bucket",
 )
+AUTOTUNE_KEYS = (
+    "batches", "depths", "prune_ratio", "configs",
+)
+AUTOTUNE_CONFIG_KEYS = (
+    "batch", "band_rows", "pipeline_depth", "bucket", "bucket_policy",
+    "predicted_ms", "measured_ms", "default_ms", "achieved_fraction",
+    "default_frames_per_s", "tuned_frames_per_s", "speedup",
+    "candidates_total", "candidates_pruned",
+)
 
 
 def _session(layers, cfg, args_like) -> SRSession:
@@ -96,6 +115,8 @@ def _session(layers, cfg, args_like) -> SRSession:
         band_rows=args_like["band_rows"],
         scale=cfg.scale,
         pipeline_depth=args_like.get("pipeline_depth", 2),
+        autotune="off",  # bench sections measure DEFAULT schedules; the
+        # autotune section is where tuned schedules are measured
     )
 
 
@@ -173,6 +194,17 @@ def measure_pipeline(layers, cfg, opts, *, bucket, chunks, reps) -> dict:
         out["pipelined"]["frames_per_s"] / max(out["sync"]["frames_per_s"], 1e-9),
         3,
     )
+    # the autotuner's measured pass is the ARBITER of pipeline depth: its
+    # bounded-inflight dispatch loop measures depths 1..2 head-to-head and
+    # ties prefer the shallower pipeline — on CPU (where overlap buys
+    # nothing and depth 2 holds an extra slab live) this selects depth 1
+    from repro.engine.autotune import tune
+
+    probe = _session(layers, cfg, opts)
+    plan = probe.plan_for((h, w, cfg.in_channels))
+    entry = tune(layers, plan, bucket, depths=(1, 2), chunks=chunks,
+                 reps=reps, max_band_candidates=1)
+    out["tuned_depth"] = int(entry.pipeline_depth)
     return out
 
 
@@ -232,6 +264,59 @@ def measure_server(layers, cfg, opts, *, req_frames, n_requests, reps) -> dict:
     return out
 
 
+def measure_autotune(layers, cfg, opts, *, batches, depths, reps) -> dict:
+    """The autotuner section: per request batch, sweep the legal schedule
+    space (roofline-pruned, then measured) and report the winner against
+    the default schedule.
+
+    ``predicted_ms`` is the winner's analytic roofline time;
+    ``achieved_fraction`` is predicted/measured (how close the measured
+    schedule runs to its roofline bound); ``speedup`` is default_ms /
+    tuned_ms — >= 1 by construction (the default candidate is always
+    measured, never pruned, and the winner never measures worse).
+    """
+    from repro.engine.autotune import tune
+    from repro.engine.plan import SRPlan
+
+    h, w = opts["height"], opts["width"]
+    plan = SRPlan.from_request(
+        (h, w, cfg.in_channels),
+        num_layers=len(layers),
+        band_rows=opts["band_rows"],
+        vertical_policy=opts["vertical_policy"],
+        backend=opts["backend"],
+        precision=opts["precision"],
+        scale=cfg.scale,
+    )
+    configs = []
+    for batch in batches:
+        entry = tune(layers, plan, batch, depths=depths, reps=reps)
+        cands = entry.candidates
+        configs.append({
+            "batch": int(batch),
+            "band_rows": entry.band_rows,
+            "pipeline_depth": entry.pipeline_depth,
+            "bucket": entry.bucket,
+            "bucket_policy": entry.bucket_policy,
+            "predicted_ms": round(entry.predicted_ms, 3),
+            "measured_ms": round(entry.measured_ms, 3),
+            "default_ms": round(entry.default_ms, 3),
+            "achieved_fraction": round(
+                entry.predicted_ms / max(entry.measured_ms, 1e-9), 4),
+            "default_frames_per_s": round(1e3 / max(entry.default_ms, 1e-9), 2),
+            "tuned_frames_per_s": round(1e3 / max(entry.measured_ms, 1e-9), 2),
+            "speedup": round(entry.speedup, 3),
+            "candidates_total": len(cands),
+            "candidates_pruned": sum(c.pruned for c in cands),
+        })
+    return {
+        "batches": [int(b) for b in batches],
+        "depths": [int(d) for d in depths],
+        "prune_ratio": 1.5,
+        "configs": configs,
+    }
+
+
 def measure(
     *,
     backend: str = "tilted",
@@ -246,6 +331,8 @@ def measure(
     pipe_chunks: int = 4,
     srv_request_frames: int = 2,
     srv_requests: int = 4,
+    tune_batches=(1, 3, 4),
+    tune_depths=(1, 2),
 ) -> dict:
     """The full benchmark record: per-batch-size stats, the pipelined-vs-
     sync clip comparison, the server coalesced-vs-solo comparison, and the
@@ -268,6 +355,10 @@ def measure(
         layers, cfg, opts, req_frames=srv_request_frames,
         n_requests=srv_requests, reps=reps,
     )
+    autotune = measure_autotune(
+        layers, cfg, opts, batches=tune_batches, depths=tune_depths,
+        reps=reps,
+    )
     probe = _session(layers, cfg, opts)
     plan = probe.plan_for((height, width, cfg.in_channels))
     roofline = plan_cost(plan, layers, pipe_bucket)
@@ -285,13 +376,15 @@ def measure(
         "pipeline": pipeline,
         "server": server,
         "roofline": roofline,
+        "autotune": autotune,
     }
 
 
 def rows():
     """Harness rows (kept small: batch 1 and 4, few reps)."""
     t0 = time.perf_counter()
-    rec = measure(batch_sizes=(1, 4), reps=3, pipe_bucket=2, pipe_chunks=4)
+    rec = measure(batch_sizes=(1, 4), reps=3, pipe_bucket=2, pipe_chunks=4,
+                  tune_batches=(1, 3))
     us = (time.perf_counter() - t0) * 1e6
     out = []
     for bs, r in rec["batch"].items():
@@ -311,6 +404,13 @@ def rows():
                 f"{v['coalesced']['mean_fill_ratio']:.2f} vs "
                 f"{v['solo']['mean_fill_ratio']:.2f}, "
                 f"bit_exact={v['bit_exact']})"))
+    for t in rec["autotune"]["configs"]:
+        out.append((f"engine.autotune.b{t['batch']}", us,
+                    f"tuned {t['tuned_frames_per_s']:.1f} vs default "
+                    f"{t['default_frames_per_s']:.1f} frames/s "
+                    f"(x{t['speedup']:.2f}, bucket {t['bucket']} "
+                    f"{t['bucket_policy']}, depth {t['pipeline_depth']}, "
+                    f"{t['achieved_fraction']:.0%} of roofline)"))
     c = rec["cache"]
     out.append(("engine.plan_cache", us,
                 f"{c['misses']} compiles, hit rate {c['hit_rate']:.2f}"))
@@ -354,7 +454,8 @@ def main():
     if args.quick:
         kw.update(height=24, width=16, batch_sizes=(1, 2), reps=2,
                   pipe_bucket=2, pipe_chunks=4,
-                  srv_request_frames=1, srv_requests=2)
+                  srv_request_frames=1, srv_requests=2,
+                  tune_batches=(1, 3))
     rec = measure(**kw)
     print("name,us_per_call,derived")
     for bs, r in rec["batch"].items():
@@ -368,7 +469,8 @@ def main():
           f'{p["chunks"]}x{p["bucket"]} clip"')
     print(f'engine.pipeline.pipelined,{p["pipelined"]["mean_ms"] * 1e3:.1f},'
           f'"{p["pipelined"]["frames_per_s"]:.1f} frames/s '
-          f'(x{p["speedup"]:.2f} vs sync, bit_exact={p["bit_exact"]})"')
+          f'(x{p["speedup"]:.2f} vs sync, bit_exact={p["bit_exact"]}, '
+          f'tuned_depth={p["tuned_depth"]})"')
     v = rec["server"]
     print(f'engine.server.solo,0.0,'
           f'"{v["solo"]["frames_per_s"]:.1f} frames/s, '
@@ -386,6 +488,14 @@ def main():
           f'"{r["hbm_bytes_per_frame"] / 1e6:.2f} MB HBM/frame, '
           f'{r["flops_per_frame"] / 1e9:.2f} GFLOP/frame, '
           f'{r["weight_bytes_resident"] / 1e3:.1f} kB weights resident"')
+    for t in rec["autotune"]["configs"]:
+        print(f'engine.autotune.b{t["batch"]},{t["measured_ms"] * 1e3:.1f},'
+              f'"tuned {t["tuned_frames_per_s"]:.1f} vs default '
+              f'{t["default_frames_per_s"]:.1f} frames/s '
+              f'(x{t["speedup"]:.2f}, bucket {t["bucket"]} '
+              f'{t["bucket_policy"]}, depth {t["pipeline_depth"]}, band '
+              f'{t["band_rows"]}, {t["achieved_fraction"]:.0%} of roofline, '
+              f'{t["candidates_pruned"]}/{t["candidates_total"]} pruned)"')
     c = rec["cache"]
     print(f'engine.plan_cache,0.0,"{c["misses"]} compiles {c["hits"]} hits '
           f'hit rate {c["hit_rate"]:.2f}"')

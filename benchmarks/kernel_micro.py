@@ -4,6 +4,12 @@ Wall-clock here is CPU interpret-mode (correctness vehicle, not TPU perf);
 the ``derived`` column therefore reports the MODELED TPU numbers from the
 dry-run machinery: per-tile MXU FLOPs, VMEM working set claimed by the
 BlockSpecs, and the analytic HBM traffic of the streaming layout.
+
+    PYTHONPATH=src python benchmarks/kernel_micro.py    # CSV rows
+
+Run standalone by CI's bench-smoke job (the Pallas datapath must at least
+execute + produce its modeled numbers on every change); also exposes
+``rows()`` for the ``benchmarks/run.py`` harness.
 """
 
 from __future__ import annotations
@@ -59,3 +65,16 @@ def rows():
         ("kernel.vmem_claim_kb", 0.0,
          f"{vmem_kb:.0f} KB f32 VMEM/tile (SRAM analogue: {102.36} KB int8)"),
     ]
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows():
+        print(f'{name},{us:.1f},"{derived}"')
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

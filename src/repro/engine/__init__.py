@@ -23,6 +23,13 @@ weights are prepared once per session into a device-resident
 flight (double buffering), and executors can donate the frame slab back to
 XLA (``donate_frames``).
 
+Schedules are TUNED, not hard-coded: the autotuner (autotune.py) sweeps
+the legal (band_rows, pipeline_depth, bucket policy) space per
+configuration — roofline-pruned, then compiled and measured — and
+persists winners in a JSON :class:`TuningDB`; sessions consult it on
+cold start (``SRSession.open(..., autotune="off"|"cached"|"full")``,
+``session.tuning_stats()``).
+
 Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
 numerics, boundary policy, backend — and ``build_executor``/``run``
 (executor.py) compile it into a single jitted call over a batch of LR
@@ -31,6 +38,13 @@ a pinned session; ``models.abpn.apply_abpn(method=...)`` is an older shim
 over ``run``.
 """
 
+from repro.engine.autotune import (
+    PlanTuner,
+    TuningDB,
+    TuningEntry,
+    TuningKey,
+    tune,
+)
 from repro.engine.executor import (
     PreparedStack,
     build_executor,
@@ -48,11 +62,18 @@ from repro.engine.plan import (
     VERTICAL_POLICIES,
     SRPlan,
     derive_band_rows,
+    legal_band_rows,
     make_plan,
 )
 from repro.engine.scheduler import MicroBatchScheduler, QueueFullError
 from repro.engine.server import SRFuture, SRServer
-from repro.engine.session import PlanCache, SRSession, StreamStats, bucket_batch
+from repro.engine.session import (
+    AUTOTUNE_MODES,
+    PlanCache,
+    SRSession,
+    StreamStats,
+    bucket_batch,
+)
 from repro.engine.stream import VideoStream
 
 __all__ = [
@@ -66,6 +87,13 @@ __all__ = [
     "SRPlan",
     "make_plan",
     "derive_band_rows",
+    "legal_band_rows",
+    "AUTOTUNE_MODES",
+    "PlanTuner",
+    "TuningDB",
+    "TuningEntry",
+    "TuningKey",
+    "tune",
     "BACKENDS",
     "PRECISIONS",
     "VERTICAL_POLICIES",

@@ -340,6 +340,8 @@ def plan_cost(
     layers: Sequence[ConvLayer],
     batch: int,
     dtype=jnp.float32,
+    *,
+    stack: Optional[PreparedStack] = None,
 ) -> dict:
     """Roofline terms of the compiled serving executor for one bucket.
 
@@ -348,10 +350,16 @@ def plan_cost(
     bytes — the software analogue of the paper's DRAM-traffic accounting,
     reported per frame alongside the weight bytes the PreparedStack keeps
     resident (the traffic weight hoisting removes from every batch).
+
+    ``stack`` reuses an already-prepared weight stack across calls — the
+    autotuner scores many candidate plans against ONE stack this way,
+    without touching any session's ``PlanCache`` (the jit wrapper here is
+    local to the call; nothing is cached at this layer).
     """
     from repro.roofline.hlo_parse import parse_hlo
 
-    stack = prepare_stack(plan, layers)
+    if stack is None:
+        stack = prepare_stack(plan, layers)
     jitted = jax.jit(_execute_stack, static_argnums=0)
     lowered = jitted.lower(
         plan, stack, jax.ShapeDtypeStruct((batch, *plan.lr_shape), dtype)

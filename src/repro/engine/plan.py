@@ -14,7 +14,8 @@ jitted callable over a batch of frames.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+import warnings
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.tiling import TileSchedule, make_schedule
 
@@ -23,6 +24,7 @@ __all__ = [
     "make_plan",
     "check_layer_channels",
     "derive_band_rows",
+    "legal_band_rows",
     "BACKENDS",
     "PRECISIONS",
     "VERTICAL_POLICIES",
@@ -42,27 +44,56 @@ PREFERRED_BAND_ROWS = 60
 MIN_BAND_ROWS = 8
 
 
+def legal_band_rows(
+    height: int,
+    preferred: int = PREFERRED_BAND_ROWS,
+    min_rows: int = MIN_BAND_ROWS,
+) -> List[int]:
+    """ALL legal ``band_rows`` for a frame height, best-default first.
+
+    Banded backends need ``height % band_rows == 0``, so the legal space
+    is the divisors of ``height`` that are not degenerate slivers
+    (``>= min_rows``), plus the always-legal full-height single band.
+    Sorted by distance from ``preferred`` (the paper's 60-row design
+    point), ties preferring the divisor ``<= preferred`` — so element 0
+    is a sensible default and the whole list is the autotuner's
+    ``band_rows`` candidate axis.
+    """
+    if height <= 0:
+        raise ValueError(f"height={height} must be positive")
+    divisors = [d for d in range(min_rows, height + 1) if height % d == 0]
+    if height not in divisors:
+        divisors.append(height)  # one full-height band is always legal
+    return sorted(divisors, key=lambda d: (abs(d - preferred), d > preferred))
+
+
 def derive_band_rows(
     height: int,
     preferred: int = PREFERRED_BAND_ROWS,
     min_rows: int = MIN_BAND_ROWS,
 ) -> int:
-    """A legal ``band_rows`` for an arbitrary frame height.
+    """The DEFAULT legal ``band_rows`` for an arbitrary frame height.
 
-    Banded backends need ``height % band_rows == 0``.  Pick the largest
-    divisor of ``height`` that is ``<= preferred`` (the paper's 60-row
-    design point); if the only such divisors are degenerate slivers
-    (``< min_rows``, e.g. a prime height), serve the frame as one
-    full-height band — always legal for any positive height.
+    Pick the largest divisor of ``height`` that is ``<= preferred`` (the
+    paper's 60-row design point); if the only such divisors are degenerate
+    slivers (``< min_rows``, e.g. a prime height), serve the frame as one
+    full-height band — always legal for any positive height.  The full
+    candidate space this default is drawn from is :func:`legal_band_rows`.
     """
     if height <= 0:
         raise ValueError(f"height={height} must be positive")
     if height <= preferred:
         return height
-    for d in range(preferred, 0, -1):
-        if height % d == 0:
-            return d if d >= min_rows else height
-    return height
+    candidates = [d for d in legal_band_rows(height, preferred, min_rows)
+                  if d <= preferred]
+    return max(candidates) if candidates else height
+
+
+def _is_degenerate_fallback(height: int, band_rows: int, preferred: int) -> bool:
+    """True when a derived ``band_rows`` is the one-giant-band fallback —
+    the frame is TALLER than the preferred band yet serves as a single
+    band (e.g. a prime height with no legal divisor)."""
+    return band_rows == height and height > preferred
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +114,11 @@ class SRPlan:
     Output:
       scale: pixel-shuffle upscale factor (anchor residual is added).
       clip: clip HR output to [0, 1].
+    Diagnostics:
+      degenerate_bands: the derived ``band_rows`` was the one-giant-band
+        fallback (a taller-than-preferred frame with no legal divisor,
+        e.g. a prime height).  Metadata only — excluded from equality and
+        hashing so plan/cache keys are unaffected.
     """
 
     height: int
@@ -96,6 +132,7 @@ class SRPlan:
     precision: str = "fp32"
     scale: int = 3
     clip: bool = True
+    degenerate_bands: bool = dataclasses.field(default=False, compare=False)
 
     def __post_init__(self):
         if self.height <= 0 or self.width <= 0 or self.in_channels <= 0:
@@ -185,6 +222,8 @@ class SRPlan:
         clip: bool = True,
         preferred_band_rows: int = PREFERRED_BAND_ROWS,
         validate: bool = True,
+        tuner: Optional[object] = None,
+        bucket: Optional[int] = None,
     ) -> "SRPlan":
         """Build a plan for an arbitrary request shape — the ONE owner of
         the shape -> geometry derivation.
@@ -195,12 +234,51 @@ class SRPlan:
         what :class:`~repro.engine.session.SRSession` calls per new
         resolution; ``make_plan`` routes through it with an explicit
         ``band_rows``.
+
+        ``tuner`` (a :class:`~repro.engine.autotune.PlanTuner`) is
+        consulted BEFORE the default derivation: if its tuning database
+        holds a measured-best ``band_rows`` for this exact configuration
+        (optionally at batch ``bucket``), that schedule wins; a miss falls
+        back to the unchanged defaults.  The tuner only ever returns
+        numerics-safe overrides (see ``PlanTuner.band_rows_for``).
+
+        A derived one-giant-band fallback (a taller-than-preferred frame
+        with no legal divisor, e.g. a prime height) is no longer silent:
+        it warns and the plan records ``degenerate_bands=True``.
         """
         if len(lr_shape) != 3:
             raise ValueError(f"lr_shape {lr_shape!r} must be (H, W, C)")
         H, W, C = (int(x) for x in lr_shape)
+        degenerate = False
         if band_rows is None:
-            band_rows = derive_band_rows(H, preferred_band_rows)
+            if tuner is not None:
+                band_rows = tuner.band_rows_for(
+                    lr_shape=(H, W, C),
+                    num_layers=num_layers,
+                    tile_cols=tile_cols,
+                    vertical_policy=vertical_policy,
+                    backend=backend,
+                    precision=precision,
+                    scale=scale,
+                    clip=clip,
+                    bucket=bucket,
+                )
+            if band_rows is None:
+                band_rows = derive_band_rows(H, preferred_band_rows)
+                # a tuner override is a MEASURED choice, never degenerate;
+                # only the silent default fallback warrants the signal
+                degenerate = _is_degenerate_fallback(H, band_rows,
+                                                     preferred_band_rows)
+            if degenerate:
+                warnings.warn(
+                    f"height {H} has no band decomposition with bands in "
+                    f"[{MIN_BAND_ROWS}, {preferred_band_rows}] rows; serving "
+                    f"as ONE {H}-row band (degenerate_bands=True on the "
+                    "plan) — banded backends lose their streaming locality "
+                    "at this height",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
         plan = cls(
             height=H,
             width=W,
@@ -213,6 +291,7 @@ class SRPlan:
             precision=precision,
             scale=scale,
             clip=clip,
+            degenerate_bands=degenerate,
         )
         if validate:
             plan.check_invariants()

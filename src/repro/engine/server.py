@@ -261,6 +261,7 @@ class SRServer:
         max_inflight_frames: Optional[int] = None,
         admission: str = "block",
         seed: int = 0,
+        autotune: Union[str, Mapping[str, str], None] = None,
         **session_kwargs,
     ) -> "SRServer":
         """Open a server hosting registered SR models by name.
@@ -268,12 +269,26 @@ class SRServer:
         Each name resolves through ``repro.models.registry``
         (``list_sr_models()`` enumerates them); ``session_kwargs``
         (backend, precision, pipeline_depth, max_bucket, ...) apply to
-        every hosted session.  With no names, hosts the paper's
+        every hosted session.  ``autotune`` sets each session's schedule
+        policy (``"off"`` | ``"cached"`` | ``"full"`` — see
+        ``session.AUTOTUNE_MODES``): a single string applies to every
+        hosted model, a mapping sets it per model name (unnamed models
+        keep the session default).  With no names, hosts the paper's
         ``abpn_x3``.
         """
         names = models or ("abpn_x3",)
+
+        def _kwargs_for(name: str) -> dict:
+            kw = dict(session_kwargs)
+            if isinstance(autotune, Mapping):
+                if name in autotune:
+                    kw["autotune"] = autotune[name]
+            elif autotune is not None:
+                kw["autotune"] = autotune
+            return kw
+
         sessions = {
-            name: SRSession.open(name, seed=seed, **session_kwargs)
+            name: SRSession.open(name, seed=seed, **_kwargs_for(name))
             for name in names
         }
         return cls(
@@ -351,10 +366,12 @@ class SRServer:
         session = self._sessions[name]
         flat, ndim, lead = session.flatten_request(frames)
         shape = tuple(int(x) for x in flat.shape[1:])
-        plan = session.plan_for(shape)
+        n = int(flat.shape[0])
+        # the request's frame count keys the tuning-DB lookup on a new
+        # shape (bucket rounding policy is tuned per batch size)
+        plan = session.plan_for(shape, batch_hint=n or None)
         dtype = session.serving_dtype(flat.dtype)
         fut = SRFuture(self)
-        n = int(flat.shape[0])
         if n == 0:
             out = jnp.zeros((0, *plan.hr_shape), session.output_dtype(plan, dtype))
             if ndim == 5:

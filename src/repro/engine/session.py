@@ -92,7 +92,18 @@ __all__ = [
     "PlanCache",
     "StreamStats",
     "bucket_batch",
+    "AUTOTUNE_MODES",
 ]
+
+# Cold-start schedule policy (SRSession.open(..., autotune=...)):
+#   "off"    — hard-coded defaults only; the tuning DB is never read.
+#   "cached" — consult the DB per new (shape, batch); a hit applies the
+#              measured-best schedule, a miss falls back to the defaults.
+#              NEVER measures in the serving path (the safe default).
+#   "full"   — like "cached", but a miss runs a small tuning sweep NOW
+#              (blocking, on the serving thread) and persists the winner —
+#              first-request latency pays for every later cold start.
+AUTOTUNE_MODES = ("off", "cached", "full")
 
 
 class StreamStats(dict):
@@ -287,18 +298,25 @@ class SRSession:
         cache_capacity: int = 8,
         max_bucket: Optional[int] = None,
         model: Optional[str] = None,
-        pipeline_depth: int = 2,
+        pipeline_depth: Optional[int] = None,
         donate_frames: Optional[bool] = None,
+        autotune: str = "cached",
+        tuner=None,
+        tuning_db: Optional[str] = None,
     ):
         layers = tuple(layers)
         if not layers:
             raise ValueError("layer stack is empty")
         if max_bucket is not None and max_bucket < 1:
             raise ValueError(f"max_bucket={max_bucket} must be >= 1")
-        if pipeline_depth < 1:
+        if pipeline_depth is not None and pipeline_depth < 1:
             raise ValueError(
                 f"pipeline_depth={pipeline_depth} must be >= 1 "
                 "(1 = blocking, 2 = double-buffered dispatch)"
+            )
+        if autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"autotune {autotune!r} not in {AUTOTUNE_MODES}"
             )
         if cache_capacity < 1:
             raise ValueError(
@@ -319,8 +337,27 @@ class SRSession:
         # pipeline_depth bounds in-flight chunks per request: 1 = blocking
         # (complete t before dispatching t+1), 2 = double buffering (the
         # paper's ping-pong line buffers), deeper = more latency hiding at
-        # the cost of holding more bucket-sized slabs live.
-        self.pipeline_depth = pipeline_depth
+        # the cost of holding more bucket-sized slabs live.  None = the
+        # tunable default (2) — the autotuner may override it from a
+        # measured DB entry; an EXPLICIT depth is the caller's decision
+        # and is never overridden.
+        self._depth_explicit = pipeline_depth is not None
+        self.pipeline_depth = 2 if pipeline_depth is None else pipeline_depth
+        # schedule autotuning: mode + the DB-backed PlanTuner ("off" keeps
+        # no tuner at all, so the DB file is never even opened)
+        self.autotune = autotune
+        self._tuner = None
+        if autotune != "off":
+            from repro.engine.autotune import PlanTuner  # lazy: no cycle
+
+            self._tuner = tuner if tuner is not None else PlanTuner(
+                path=tuning_db
+            )
+        self._tuning_counts = {"hits": 0, "misses": 0, "fallbacks": 0,
+                               "applied": 0, "tuned_now": 0}
+        # request batch sizes whose measured-best bucket policy is "exact"
+        # (compile the true batch instead of rounding up to a power of two)
+        self._exact_buckets: set = set()
         # donate_frames=None resolves per-backend at first executor build:
         # XLA implements input-output aliasing on accelerators but not CPU
         # (donating there just warns and copies).
@@ -432,8 +469,21 @@ class SRSession:
     def num_layers(self) -> int:
         return len(self.layers)
 
-    def plan_for(self, lr_shape: Tuple[int, int, int]) -> SRPlan:
-        """The session's plan for one LR frame shape (derived once, memoised)."""
+    def plan_for(
+        self,
+        lr_shape: Tuple[int, int, int],
+        batch_hint: Optional[int] = None,
+    ) -> SRPlan:
+        """The session's plan for one LR frame shape (derived once, memoised).
+
+        ``batch_hint`` (the request's flattened frame count, passed by the
+        server's submit path) keys the tuning-DB lookup: a warm entry for
+        this (shape, batch) applies the measured-best schedule — band
+        decomposition via ``SRPlan.from_request(tuner=...)``, pipeline
+        depth and bucket rounding policy via :meth:`_apply_tuning` — before
+        anything compiles.  With ``autotune="off"`` (or an explicit
+        ``band_rows``) the derivation is exactly the untuned default.
+        """
         lr_shape = tuple(int(x) for x in lr_shape)
         plan = self._plans.get(lr_shape)
         if plan is not None:
@@ -444,6 +494,9 @@ class SRSession:
                 f"got {lr_shape}"
             )
         check_layer_channels(self.layers, lr_shape[2], self.scale)
+        tuner = self._tuner if self.band_rows is None else None
+        if tuner is not None:
+            self._consult_tuning(lr_shape, batch_hint)
         plan = SRPlan.from_request(
             lr_shape,
             num_layers=self.num_layers,
@@ -455,9 +508,92 @@ class SRSession:
             scale=self.scale,
             clip=self.clip,
             preferred_band_rows=self.preferred_band_rows,
+            tuner=tuner,
+            bucket=batch_hint,
         )
         self._memo_put(self._plans, lr_shape, plan)
         return plan
+
+    # ------------------------------------------------------------------
+    # Schedule autotuning (engine.autotune)
+    # ------------------------------------------------------------------
+    def _tuning_key(self, lr_shape: tuple, batch: Optional[int]):
+        from repro.engine.autotune import TuningKey
+
+        H, W, C = lr_shape
+        return TuningKey(
+            backend=self.backend, precision=self.precision,
+            vertical_policy=self.vertical_policy,
+            height=H, width=W, channels=C,
+            num_layers=self.num_layers, tile_cols=self.tile_cols,
+            scale=self.scale, clip=self.clip,
+            batch=int(batch) if batch else 1,
+        )
+
+    def _consult_tuning(self, lr_shape: tuple, batch: Optional[int]) -> None:
+        """DB lookup for a new shape: count the outcome, apply a hit's
+        depth/bucket policy, and — ``autotune="full"`` only — tune NOW on
+        a miss (blocking; the winner persists for every later cold
+        start)."""
+        key = self._tuning_key(lr_shape, batch)
+        entry, kind = self._tuner.lookup(key)
+        self._tuning_counts[
+            {"hit": "hits", "fallback": "fallbacks", "miss": "misses"}[kind]
+        ] += 1
+        if entry is None and self.autotune == "full":
+            entry = self._tune_now(lr_shape, batch)
+        if entry is not None:
+            self._apply_tuning(entry)
+
+    def _apply_tuning(self, entry) -> None:
+        """Adopt a measured-best schedule's session-level knobs.  Band
+        decomposition is applied where plans are built (``from_request``'s
+        tuner hook); depth applies unless the caller pinned one
+        explicitly; an "exact" bucket policy registers the tuned batch so
+        ``_bucket_for`` stops rounding it up."""
+        self._tuning_counts["applied"] += 1
+        if not self._depth_explicit:
+            self.pipeline_depth = int(entry.pipeline_depth)
+        if entry.bucket_policy == "exact":
+            self._exact_buckets.add(int(entry.bucket))
+
+    def _tune_now(self, lr_shape: tuple, batch: Optional[int]):
+        """The ``autotune="full"`` miss path: run a small measured sweep
+        for this (shape, batch) and persist the winner (shallow depth grid
+        + few reps — first-request latency, paid once per DB)."""
+        from repro.engine.autotune import tune
+
+        default_plan = SRPlan.from_request(
+            lr_shape,
+            num_layers=self.num_layers,
+            tile_cols=self.tile_cols,
+            vertical_policy=self.vertical_policy,
+            backend=self.backend,
+            precision=self.precision,
+            scale=self.scale,
+            clip=self.clip,
+            preferred_band_rows=self.preferred_band_rows,
+        )
+        entry = tune(
+            self.layers, default_plan, batch or 1,
+            db=self._tuner.db, depths=(1, 2), chunks=2, reps=1,
+        )
+        self._tuning_counts["tuned_now"] += 1
+        return entry
+
+    def tuning_stats(self) -> dict:
+        """Autotune outcome counters: ``hits`` (exact DB entry),
+        ``fallbacks`` (nearest tuned batch), ``misses``, ``applied``
+        (schedules adopted), ``tuned_now`` (blocking sweeps run by
+        ``autotune="full"``), plus the mode, DB path and the live
+        session-level knobs the tuner controls."""
+        return {
+            "mode": self.autotune,
+            "db_path": self._tuner.db.path if self._tuner else None,
+            **self._tuning_counts,
+            "pipeline_depth": self.pipeline_depth,
+            "exact_buckets": sorted(self._exact_buckets),
+        }
 
     def _memo_put(self, memo: dict, key, value) -> None:
         """Insert into a memo dict, evicting oldest entries past the cap
@@ -587,6 +723,12 @@ class SRSession:
     def _bucket_for(self, n: int) -> int:
         if self._pinned_bucket is not None:
             return self._pinned_bucket
+        if n in self._exact_buckets and (
+            self.max_bucket is None or n <= self.max_bucket
+        ):
+            # the tuner measured this batch faster compiled exactly than
+            # rounded up (padding waste beats the extra program)
+            return n
         bucket = bucket_batch(n)
         if self.max_bucket is not None:
             # clamp DOWN to the largest power of two within the cap — the

@@ -1,0 +1,530 @@
+"""Tests for the roofline-guided plan autotuner (engine.autotune).
+
+Covers the four contracts ISSUE 6 pins down:
+
+* TuningDB — round-trip, atomic write, bounded capacity, stale-schema /
+  wrong-backend rejection.
+* Pruning safety — the analytic roofline's 1.5x prune never discards the
+  measured-best candidate on a parity-matrix-style plan set (tune with
+  ``measure_all=True`` finds the true best; the pruned sweep must land
+  within tie tolerance of it), and the default candidate always survives.
+* Serving integration — a cold ``SRSession`` with ``autotune="cached"``
+  and a warm DB compiles ONLY the winning plan (cache misses == 1, no
+  non-winning candidate ever compiled), and ``"cached"`` NEVER measures.
+* Numerics — a tuned schedule is bit-exact against the default schedule
+  (tuning changes the schedule, never the output), including band_rows
+  moves under the halo policy, where band decomposition is an exact
+  recompute.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import autotune as at
+from repro.engine.autotune import (
+    SCHEMA_VERSION,
+    PlanTuner,
+    TuningDB,
+    TuningEntry,
+    TuningKey,
+    enumerate_candidates,
+    predict_cost,
+    tune,
+)
+from repro.engine.plan import SRPlan, derive_band_rows, legal_band_rows
+from repro.engine.session import SRSession
+from repro.models.abpn import ABPNConfig, init_abpn
+
+CFG = ABPNConfig()
+LAYERS = init_abpn(jax.random.PRNGKey(0), CFG)
+SMALL = (24, 16, 3)
+
+
+def small_plan(**kw) -> SRPlan:
+    return SRPlan.from_request(
+        SMALL, num_layers=len(LAYERS), scale=CFG.scale, **kw
+    )
+
+
+def entry_for(plan: SRPlan, batch: int, **over) -> TuningEntry:
+    base = dict(
+        band_rows=plan.band_rows, pipeline_depth=1, bucket=batch,
+        bucket_policy="exact", predicted_ms=1.0, measured_ms=1.0,
+        default_ms=1.5, speedup=1.5,
+        jax_backend=jax.default_backend(), device_kind=at.device_kind(),
+        created=123.0,
+    )
+    base.update(over)
+    return TuningEntry(**base)
+
+
+# ----------------------------------------------------------------------
+# legal_band_rows / derive_band_rows (the satellite generalisation)
+# ----------------------------------------------------------------------
+def test_legal_band_rows_all_divisors_sorted_by_preference():
+    cands = legal_band_rows(120)
+    assert all(120 % d == 0 for d in cands)
+    assert cands[0] == 60  # nearest the paper's design point
+    assert set(cands) == {8, 10, 12, 15, 20, 24, 30, 40, 60, 120}
+    # distance from preferred is non-decreasing
+    dist = [abs(d - 60) for d in cands]
+    assert dist == sorted(dist)
+
+
+def test_legal_band_rows_prime_height_only_full_band():
+    assert legal_band_rows(127) == [127]
+
+
+def test_derive_band_rows_matches_legacy_semantics():
+    assert derive_band_rows(360) == 60
+    assert derive_band_rows(120) == 60
+    assert derive_band_rows(80) == 40
+    assert derive_band_rows(62) == 31
+    assert derive_band_rows(24) == 24
+    assert derive_band_rows(127) == 127  # prime: one giant band
+
+
+def test_prime_height_warns_and_flags_degenerate():
+    with pytest.warns(RuntimeWarning, match="ONE 127-row band"):
+        plan = SRPlan.from_request((127, 16, 3), num_layers=len(LAYERS))
+    assert plan.degenerate_bands is True
+    assert plan.band_rows == 127
+    # metadata only: equal to the same plan without the flag, same hash
+    twin = SRPlan.from_request((127, 16, 3), num_layers=len(LAYERS),
+                               band_rows=127)
+    assert twin.degenerate_bands is False
+    assert plan == twin and hash(plan) == hash(twin)
+
+
+def test_non_degenerate_heights_do_not_warn():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan = SRPlan.from_request((120, 16, 3), num_layers=len(LAYERS))
+    assert plan.degenerate_bands is False
+
+
+# ----------------------------------------------------------------------
+# TuningDB
+# ----------------------------------------------------------------------
+def test_db_round_trip(tmp_path):
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    key = TuningKey.from_plan(plan, 3)
+    db = TuningDB(path)
+    db.put(key, entry_for(plan, 3))
+    db.save()
+
+    db2 = TuningDB(path)
+    got = db2.get(key)
+    assert got is not None
+    assert got.bucket == 3 and got.bucket_policy == "exact"
+    assert got.speedup == 1.5
+    # a different batch is a different key
+    assert db2.get(TuningKey.from_plan(plan, 5)) is None
+
+
+def test_db_atomic_write_leaves_no_partial_file(tmp_path):
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    db = TuningDB(path)
+    db.put(TuningKey.from_plan(plan, 1), entry_for(plan, 1))
+    db.save()
+    before = open(path).read()
+
+    # a failing save must leave the original intact and no temp litter
+    class Boom(RuntimeError):
+        pass
+
+    unserializable = entry_for(plan, 2)
+    unserializable.band_rows = object()  # json.dump will raise mid-write
+    db.put(TuningKey.from_plan(plan, 2), unserializable)
+    with pytest.raises(TypeError):
+        db.save()
+    assert open(path).read() == before
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+    # and the intact file still loads
+    assert TuningDB(path).get(TuningKey.from_plan(plan, 1)) is not None
+
+
+def test_db_stale_schema_rejected(tmp_path):
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    key = TuningKey.from_plan(plan, 1)
+    db = TuningDB(path)
+    db.put(key, entry_for(plan, 1))
+    db.save()
+
+    raw = json.load(open(path))
+    raw["schema"] = SCHEMA_VERSION + 1
+    json.dump(raw, open(path, "w"))
+    stale = TuningDB(path)
+    assert stale.stale_schema is True
+    assert len(stale) == 0
+    assert stale.get(key) is None
+
+
+def test_db_wrong_backend_or_device_rejected(tmp_path):
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    key = TuningKey.from_plan(plan, 1)
+    db = TuningDB(path)
+    db.put(key, entry_for(plan, 1, jax_backend="tpu"))
+    db.put(TuningKey.from_plan(plan, 2),
+           entry_for(plan, 2, device_kind="TPU v4"))
+    db.save()
+    db2 = TuningDB(path)
+    assert db2.get(key) is None  # wrong jax backend
+    assert db2.get(TuningKey.from_plan(plan, 2)) is None  # wrong device
+    # entries are still PRESENT (not deleted) — just never applied here
+    assert len(db2) == 2
+
+
+def test_db_malformed_and_torn_files_start_empty(tmp_path):
+    torn = tmp_path / "torn.json"
+    torn.write_text('{"schema": 1, "entries": {"k": ')  # truncated
+    db = TuningDB(str(torn))
+    assert len(db) == 0 and db.stale_schema is False
+
+    notdict = tmp_path / "list.json"
+    notdict.write_text("[1, 2, 3]")
+    db2 = TuningDB(str(notdict))
+    assert len(db2) == 0 and db2.stale_schema is True
+
+
+def test_db_bounded_capacity_evicts_oldest(tmp_path):
+    plan = small_plan()
+    db = TuningDB(str(tmp_path / "db.json"), capacity=3)
+    for b in (1, 2, 3, 4):
+        db.put(TuningKey.from_plan(plan, b), entry_for(plan, b))
+    assert len(db) == 3
+    assert db.get(TuningKey.from_plan(plan, 1)) is None  # oldest evicted
+    assert db.get(TuningKey.from_plan(plan, 4)) is not None
+
+
+def test_db_nearest_batch_fallback(tmp_path):
+    plan = small_plan()
+    db = TuningDB(str(tmp_path / "db.json"))
+    db.put(TuningKey.from_plan(plan, 4), entry_for(plan, 4, bucket=4))
+    db.put(TuningKey.from_plan(plan, 16), entry_for(plan, 16, bucket=16))
+    near = db.get_nearest_batch(TuningKey.from_plan(plan, 5))
+    assert near is not None
+    entry, tuned_batch = near
+    assert tuned_batch == 4  # |5-4| < |5-16|
+    # a different configuration (other policy) never matches
+    other = SRPlan.from_request(SMALL, num_layers=len(LAYERS),
+                                vertical_policy="halo", scale=CFG.scale)
+    assert db.get_nearest_batch(TuningKey.from_plan(other, 5)) is None
+
+
+# ----------------------------------------------------------------------
+# PlanTuner lookup semantics
+# ----------------------------------------------------------------------
+def test_tuner_hit_fallback_miss(tmp_path):
+    plan = small_plan()
+    db = TuningDB(str(tmp_path / "db.json"))
+    db.put(TuningKey.from_plan(plan, 3), entry_for(plan, 3))
+    tuner = PlanTuner(db)
+    assert tuner.lookup(TuningKey.from_plan(plan, 3))[1] == "hit"
+    assert tuner.lookup(TuningKey.from_plan(plan, 7))[1] == "fallback"
+    other = SRPlan.from_request(SMALL, num_layers=len(LAYERS),
+                                precision="bf16", scale=CFG.scale)
+    assert tuner.lookup(TuningKey.from_plan(other, 3))[1] == "miss"
+
+
+def test_tuner_rejects_numerics_unsafe_band_override(tmp_path):
+    """A DB entry moving band_rows off the default must only apply under
+    halo (exact band decomposition); zero-policy plans ignore it."""
+    zero_plan = small_plan()  # zero policy, band_rows == 24 (default)
+    db = TuningDB(str(tmp_path / "db.json"))
+    db.put(TuningKey.from_plan(zero_plan, 1),
+           entry_for(zero_plan, 1, band_rows=8))  # 8 != default 24
+    tuner = PlanTuner(db)
+    entry, kind = tuner.lookup(TuningKey.from_plan(zero_plan, 1))
+    assert entry is None and kind == "miss"
+    # the same override IS honoured for a halo plan
+    halo_plan = SRPlan.from_request(SMALL, num_layers=len(LAYERS),
+                                    vertical_policy="halo", scale=CFG.scale)
+    db.put(TuningKey.from_plan(halo_plan, 1),
+           entry_for(halo_plan, 1, band_rows=8))
+    entry, kind = tuner.lookup(TuningKey.from_plan(halo_plan, 1))
+    assert entry is not None and entry.band_rows == 8
+
+
+def test_tuner_rejects_stale_geometry(tmp_path):
+    """An entry whose band_rows no longer divides the height is stale."""
+    plan = small_plan(vertical_policy="halo")
+    db = TuningDB(str(tmp_path / "db.json"))
+    db.put(TuningKey.from_plan(plan, 1), entry_for(plan, 1, band_rows=7))
+    assert PlanTuner(db).lookup(TuningKey.from_plan(plan, 1))[0] is None
+
+
+def test_from_request_consults_tuner(tmp_path):
+    halo_plan = SRPlan.from_request(SMALL, num_layers=len(LAYERS),
+                                    vertical_policy="halo", scale=CFG.scale)
+    db = TuningDB(str(tmp_path / "db.json"))
+    db.put(TuningKey.from_plan(halo_plan, 2),
+           entry_for(halo_plan, 2, band_rows=8))
+    tuned = SRPlan.from_request(
+        SMALL, num_layers=len(LAYERS), vertical_policy="halo",
+        scale=CFG.scale, tuner=PlanTuner(db), bucket=2,
+    )
+    assert tuned.band_rows == 8
+    assert tuned.degenerate_bands is False  # a measured choice, not a fallback
+    # no tuner -> unchanged default
+    assert SRPlan.from_request(
+        SMALL, num_layers=len(LAYERS), vertical_policy="halo",
+        scale=CFG.scale,
+    ).band_rows == 24
+
+
+# ----------------------------------------------------------------------
+# Candidate space + analytic roofline
+# ----------------------------------------------------------------------
+def test_enumerate_has_exactly_one_default():
+    for policy in ("zero", "halo"):
+        plan = small_plan(vertical_policy=policy)
+        cands = enumerate_candidates(plan, 3)
+        assert sum(c.is_default for c in cands) == 1
+        d = next(c for c in cands if c.is_default)
+        assert d.bucket == 4 and d.pipeline_depth == 2
+        assert d.band_rows == derive_band_rows(plan.height)
+
+
+def test_enumerate_band_axis_only_under_halo():
+    zero = enumerate_candidates(small_plan(), 1)
+    assert {c.band_rows for c in zero} == {24}
+    halo = enumerate_candidates(
+        SRPlan.from_request((120, 16, 3), num_layers=len(LAYERS),
+                            vertical_policy="halo", scale=CFG.scale),
+        1,
+    )
+    assert len({c.band_rows for c in halo}) > 1
+    assert all(120 % c.band_rows == 0 for c in halo)
+
+
+def test_predict_cost_orders_padding_waste():
+    """The analytic model must charge bucket padding: serving 3 real
+    frames in a bucket of 4 predicts slower per-frame than exact 3."""
+    plan = small_plan()
+    exact = predict_cost(plan, LAYERS, 3, 3)["ms_per_frame"]
+    padded = predict_cost(plan, LAYERS, 4, 3)["ms_per_frame"]
+    assert padded > exact
+    assert padded == pytest.approx(exact * 4 / 3)
+
+
+def test_predict_cost_charges_halo_recompute():
+    h = SRPlan.from_request((120, 16, 3), num_layers=len(LAYERS),
+                            vertical_policy="halo", scale=CFG.scale)
+    z = SRPlan.from_request((120, 16, 3), num_layers=len(LAYERS),
+                            scale=CFG.scale)
+    fh = predict_cost(h, LAYERS, 1, 1)["flops_per_frame"]
+    fz = predict_cost(z, LAYERS, 1, 1)["flops_per_frame"]
+    assert fh > fz  # (R + 2L) rows computed per band vs R
+
+
+# ----------------------------------------------------------------------
+# tune(): pruning safety, winner guarantees (measured — the slower tests)
+# ----------------------------------------------------------------------
+def test_default_candidate_never_pruned():
+    plan = small_plan()
+    # absurd peaks make the analytic model maximally wrong: everything
+    # prunable... except the exempt default
+    peaks = at.RooflinePeaks(flops_per_s=1.0, hbm_bytes_per_s=1e18,
+                             cache_bytes=1e18)
+    entry = tune(LAYERS, plan, 3, depths=(1,), chunks=2, reps=1, peaks=peaks)
+    cands = entry.candidates
+    assert not any(c.pruned and c.is_default for c in cands)
+    assert any(not c.pruned for c in cands)
+
+
+def test_tuned_never_regresses_below_default():
+    plan = small_plan()
+    for batch in (1, 3):
+        entry = tune(LAYERS, plan, batch, depths=(1, 2), chunks=2, reps=1)
+        assert entry.measured_ms <= entry.default_ms
+        assert entry.speedup >= 1.0
+
+
+@pytest.mark.slow
+def test_pruning_never_discards_measured_best():
+    """Parity-matrix-style plan set: run ONE unpruned (measure_all) sweep
+    per plan, find the measured-best candidate, and check the 1.5x
+    analytic prune rule would have kept it.  (Deterministic: the prune
+    decision is a pure function of the analytic predictions already on
+    the candidates — no second noisy measurement.)"""
+    plan_set = [
+        small_plan(),
+        small_plan(vertical_policy="halo"),
+        small_plan(precision="bf16"),
+        SRPlan.from_request((48, 16, 3), num_layers=len(LAYERS),
+                            vertical_policy="halo", scale=CFG.scale),
+    ]
+    for plan in plan_set:
+        full = tune(LAYERS, plan, 3, depths=(1, 2), chunks=2, reps=2,
+                    measure_all=True)
+        cands = full.candidates
+        assert not any(c.pruned for c in cands)  # measure_all measured all
+        best_pred = min(c.predicted_ms for c in cands)
+        import math
+
+        measured = [c for c in cands if not math.isnan(c.measured_ms)]
+        best = min(measured, key=lambda c: c.measured_ms)
+        assert best.is_default or best.predicted_ms <= 1.5 * best_pred, (
+            f"{plan.vertical_policy}/{plan.precision}: the 1.5x prune "
+            f"would discard the measured-best candidate (band "
+            f"{best.band_rows}, bucket {best.bucket}, depth "
+            f"{best.pipeline_depth}: predicted {best.predicted_ms:.3f}ms "
+            f"vs roofline-best {best_pred:.3f}ms)"
+        )
+
+
+def test_tune_persists_and_reload_hits(tmp_path):
+    plan = small_plan()
+    db = TuningDB(str(tmp_path / "db.json"))
+    entry = tune(LAYERS, plan, 3, db=db, depths=(1,), chunks=2, reps=1)
+    got = TuningDB(str(tmp_path / "db.json")).get(TuningKey.from_plan(plan, 3))
+    assert got is not None
+    assert got.bucket == entry.bucket
+    assert got.pipeline_depth == entry.pipeline_depth
+
+
+# ----------------------------------------------------------------------
+# Serving integration (SRSession / SRServer)
+# ----------------------------------------------------------------------
+def warm_db(path: str, plan: SRPlan, batch: int) -> TuningEntry:
+    db = TuningDB(path)
+    return tune(LAYERS, plan, batch, db=db, depths=(1, 2), chunks=2, reps=1)
+
+
+def test_cached_session_compiles_only_the_winner(tmp_path):
+    """The acceptance criterion: cold session + warm DB => exactly one
+    compile, and it is the tuned winner's (plan, bucket)."""
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    entry = warm_db(path, plan, 3)
+
+    session = SRSession(LAYERS, scale=CFG.scale, autotune="cached",
+                        tuning_db=path)
+    frames = np.random.default_rng(0).random((3, *SMALL), np.float32)
+    out = session.upscale(frames)
+    assert out.shape == (3, 72, 48, 3)
+
+    ts = session.tuning_stats()
+    assert ts["hits"] == 1 and ts["misses"] == 0
+    assert ts["applied"] == 1 and ts["tuned_now"] == 0
+    cs = session.cache_stats()
+    assert cs["misses"] == 1  # ONLY the winning plan compiled
+    assert len(cs["entries"]) == 1
+    assert cs["entries"][0]["bucket"] == entry.bucket
+    assert cs["entries"][0]["band_rows"] == entry.band_rows
+    assert session.pipeline_depth == entry.pipeline_depth
+
+
+def test_cached_mode_never_measures_on_miss(tmp_path):
+    """"cached" on a cold DB: miss counted, defaults used, NO sweep run
+    (the DB file stays empty)."""
+    path = str(tmp_path / "db.json")
+    session = SRSession(LAYERS, scale=CFG.scale, autotune="cached",
+                        tuning_db=path)
+    frames = np.zeros((3, *SMALL), np.float32)
+    session.upscale(frames)
+    ts = session.tuning_stats()
+    assert ts["misses"] == 1 and ts["tuned_now"] == 0
+    assert not os.path.exists(path)  # nothing measured, nothing written
+    # defaults: pow2 bucket, depth 2
+    assert session.cache_stats()["entries"][0]["bucket"] == 4
+    assert session.pipeline_depth == 2
+
+
+def test_full_mode_tunes_on_miss_and_persists(tmp_path):
+    path = str(tmp_path / "db.json")
+    session = SRSession(LAYERS, scale=CFG.scale, autotune="full",
+                        tuning_db=path)
+    frames = np.zeros((3, *SMALL), np.float32)
+    session.upscale(frames)
+    ts = session.tuning_stats()
+    assert ts["misses"] == 1 and ts["tuned_now"] == 1 and ts["applied"] == 1
+    assert len(TuningDB(path)) == 1
+    # a SECOND session now cold-starts as a pure cache hit
+    s2 = SRSession(LAYERS, scale=CFG.scale, autotune="cached",
+                   tuning_db=path)
+    s2.upscale(frames)
+    assert s2.tuning_stats()["hits"] == 1
+    assert s2.tuning_stats()["tuned_now"] == 0
+
+
+def test_off_mode_never_touches_db(tmp_path):
+    session = SRSession(LAYERS, scale=CFG.scale, autotune="off")
+    assert session._tuner is None
+    session.upscale(np.zeros((3, *SMALL), np.float32))
+    ts = session.tuning_stats()
+    assert ts == {"mode": "off", "db_path": None, "hits": 0, "misses": 0,
+                  "fallbacks": 0, "applied": 0, "tuned_now": 0,
+                  "pipeline_depth": 2, "exact_buckets": []}
+
+
+def test_explicit_pipeline_depth_never_overridden(tmp_path):
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    db = TuningDB(path)
+    db.put(TuningKey.from_plan(plan, 3), entry_for(plan, 3, pipeline_depth=4))
+    db.save()
+    session = SRSession(LAYERS, scale=CFG.scale, autotune="cached",
+                        tuning_db=path, pipeline_depth=3)
+    session.upscale(np.zeros((3, *SMALL), np.float32))
+    assert session.tuning_stats()["applied"] == 1
+    assert session.pipeline_depth == 3  # the caller's explicit choice
+
+
+def test_invalid_autotune_mode_rejected():
+    with pytest.raises(ValueError, match="autotune"):
+        SRSession(LAYERS, scale=CFG.scale, autotune="always")
+
+
+def test_server_passes_policy_per_model(tmp_path):
+    from repro.engine.server import SRServer
+
+    srv = SRServer.open("abpn_x3", autotune="off")
+    assert srv.session().tuning_stats()["mode"] == "off"
+    srv2 = SRServer.open("abpn_x3", autotune={"abpn_x3": "full"})
+    assert srv2.session().tuning_stats()["mode"] == "full"
+
+
+# ----------------------------------------------------------------------
+# Numerics: tuning must never change the output
+# ----------------------------------------------------------------------
+def test_tuned_output_bit_exact_vs_default(tmp_path):
+    """End-to-end: the tuned session's output equals the default
+    session's, bit for bit (exact bucket + depth change only)."""
+    path = str(tmp_path / "db.json")
+    warm_db(path, small_plan(), 3)
+    frames = np.random.default_rng(1).random((3, *SMALL), np.float32)
+    tuned = SRSession(LAYERS, scale=CFG.scale, autotune="cached",
+                      tuning_db=path).upscale(frames)
+    default = SRSession(LAYERS, scale=CFG.scale,
+                        autotune="off").upscale(frames)
+    assert np.array_equal(np.asarray(tuned), np.asarray(default))
+
+
+@pytest.mark.slow
+def test_halo_band_rows_move_is_bit_exact(tmp_path):
+    """The numerics-safety premise of the band axis: under halo, EVERY
+    legal band decomposition produces the identical output — so a tuned
+    band_rows override cannot change serving results."""
+    shape = (48, 16, 3)
+    frames = np.random.default_rng(2).random((2, *shape), np.float32)
+    outs = []
+    for band in legal_band_rows(48):
+        plan = SRPlan.from_request(shape, num_layers=len(LAYERS),
+                                   vertical_policy="halo",
+                                   band_rows=band, scale=CFG.scale)
+        s = SRSession.from_plan(plan, LAYERS, autotune="off")
+        outs.append(np.asarray(s.upscale(frames)))
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)
