@@ -22,6 +22,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from engine_throughput import (  # noqa: E402
+    ANALYSIS_KEYS,
+    ANALYSIS_SEVERITY_KEYS,
     AUTOTUNE_CONFIG_KEYS,
     AUTOTUNE_KEYS,
     BATCH_KEYS,
@@ -102,6 +104,24 @@ def check_record(rec: dict) -> list:
     depth = rec.get("pipeline", {}).get("tuned_depth")
     if depth is not None and not 1 <= depth <= 4:
         errors.append(f"pipeline.tuned_depth {depth} outside the legal 1..4")
+    analysis = rec.get("analysis", {})
+    _require(analysis, ANALYSIS_KEYS, "analysis", errors)
+    for checker in ("concurrency", "plan", "program"):
+        counts = analysis.get(checker, {})
+        _require(counts, ANALYSIS_SEVERITY_KEYS,
+                 f"analysis.{checker}", errors)
+        n_err = counts.get("error")
+        if n_err is not None and n_err != 0:
+            errors.append(
+                f"analysis.{checker} recorded {n_err} error-level "
+                "finding(s) — the static gate must be clean when a bench "
+                "record is produced"
+            )
+    if analysis and analysis.get("clean") is not True:
+        errors.append(
+            "analysis.clean must be true — perf numbers from a tree that "
+            "violates its own static invariants are not comparable"
+        )
     return errors
 
 

@@ -70,7 +70,7 @@ DEFAULT_BATCHES = (1, 4, 8)
 RECORD_KEYS = (
     "bench", "backend", "precision", "vertical_policy", "lr_shape",
     "band_rows", "jax_backend", "platform", "batch", "cache", "pipeline",
-    "roofline", "server", "autotune",
+    "roofline", "server", "autotune", "analysis",
 )
 BATCH_KEYS = (
     "frames_per_s", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
@@ -104,6 +104,9 @@ AUTOTUNE_CONFIG_KEYS = (
     "default_frames_per_s", "tuned_frames_per_s", "speedup",
     "candidates_total", "candidates_pruned",
 )
+# static-analysis gate outcome: per-checker finding counts + the verdict
+ANALYSIS_KEYS = ("concurrency", "plan", "program", "clean")
+ANALYSIS_SEVERITY_KEYS = ("error", "warning", "info")
 
 
 def _session(layers, cfg, args_like) -> SRSession:
@@ -317,6 +320,18 @@ def measure_autotune(layers, cfg, opts, *, batches, depths, reps) -> dict:
     }
 
 
+def measure_analysis() -> dict:
+    """The static-verification gate's outcome, recorded alongside the
+    perf sections: per-checker finding counts by severity plus the
+    ``clean`` verdict (``python -m repro.analysis --all`` on this exact
+    tree).  A record with ``clean: false`` fails the schema check — perf
+    numbers from a tree that violates its own static invariants are not
+    comparable."""
+    from repro.analysis.sweep import analysis_report
+
+    return analysis_report()
+
+
 def measure(
     *,
     backend: str = "tilted",
@@ -377,6 +392,7 @@ def measure(
         "server": server,
         "roofline": roofline,
         "autotune": autotune,
+        "analysis": measure_analysis(),
     }
 
 

@@ -1,0 +1,41 @@
+"""repro.analysis — the static-analysis subsystem (CI gate).
+
+Three checkers, one shape of diagnostic (:class:`Finding`), one front
+door (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.plan_check` — prove an ``SRPlan``'s geometry:
+  band coverage, halo sufficiency vs receptive-field growth, and the
+  Pallas kernel's real on-chip bytes vs the paper's Table II budget
+  (102.36 KB).  Wired into ``SRPlan.verify()`` and
+  ``SRSession.open(..., strict=True)``.
+* :mod:`repro.analysis.program_audit` — scan every compiled executor's
+  jaxpr/HLO for quant ops in the hot path, host callbacks/transfers,
+  silent fp32 upcasts, missing donation, and recompiles.
+* :mod:`repro.analysis.concurrency_lint` — AST lint of the serving
+  sources for blocking calls / ``await`` under a held lock and
+  lock-order cycles.
+
+NOTE: this package is imported lazily by the engine (never the reverse
+at import time), so ``repro.engine`` stays importable without it and no
+cycle forms.
+"""
+
+from repro.analysis.findings import (
+    Finding,
+    PlanVerificationError,
+    SEVERITIES,
+    count_by_checker,
+    count_by_severity,
+    errors,
+    format_findings,
+)
+
+__all__ = [
+    "Finding",
+    "PlanVerificationError",
+    "SEVERITIES",
+    "count_by_checker",
+    "count_by_severity",
+    "errors",
+    "format_findings",
+]

@@ -1,0 +1,244 @@
+"""Compiled-program audit: scan what serving ACTUALLY runs.
+
+The serving guarantees established by PRs 4-5 — weight prep hoisted out
+of the hot path, no host round-trips inside the drain loop, donation
+when requested — are properties of the *compiled* executor, not of the
+Python source.  This pass scans the jaxpr and optimized HLO of every
+executor a session's :class:`~repro.engine.session.PlanCache` holds:
+
+* ``quant_in_hot_path`` — quantise/dequantise rounding in a prepared
+  program.  The int8 policy rounds weights exactly once at
+  ``prepare_stack`` time; a ``round`` primitive inside the per-batch
+  program means the round-trip got traced back in (the regression PR 4's
+  bespoke jaxpr test guarded; this pass is that guarantee, generalized).
+* ``host_callback`` / ``host_transfer`` — ``pure_callback``/``io_callback``
+  in the jaxpr, or infeed/outfeed/send/recv ops and callback
+  custom-calls in the HLO.  Any of these serializes the serving loop on
+  the host.
+* ``fp32_upcast`` — a bf16 plan whose conv/dot ops all emit fp32: the
+  on-chip compute silently fell back to full precision (fp32
+  *accumulation* with bf16 outputs is fine and expected on the MXU).
+  int8 plans deliberately compute in fp32 (dequant-on-read), so the rule
+  applies to ``bf16`` only.
+* ``missing_donation`` — the session resolved ``donate_frames=True`` but
+  the cached executor was built without donation (or the entry's
+  bookkeeping disagrees with the executor).
+* ``recompile`` — a ``(plan, bucket, dtype)`` cache key that compiled
+  more than once (evicted and re-missed): steady-state latency paid a
+  hidden compile.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "audit_jaxpr",
+    "audit_hlo",
+    "audit_entry",
+    "audit_session",
+    "QUANT_TOKEN",
+    "HOST_TRANSFER_OPCODES",
+]
+
+# The quantise round-trip's jaxpr fingerprint: `round` is emitted by
+# core.quant's round-to-nearest and by nothing else in the datapath
+# (clipping lowers to clamp, casts to convert_element_type).
+QUANT_TOKEN = "round"
+
+HOST_TRANSFER_OPCODES = frozenset(
+    {"infeed", "outfeed", "send", "send-done", "recv", "recv-done"}
+)
+
+# jaxpr eqn line: `c:f32[2,60,64,28] = conv_general_dilated[...] a b`
+_MATMUL_EQN_RE = re.compile(r"=\s*(conv_general_dilated|dot_general)\b")
+_OUT_DTYPE_RE = re.compile(r":([a-z][a-z0-9]*)\[")
+
+
+def audit_jaxpr(
+    jaxpr_text: str, *, precision: Optional[str] = None, where: str = ""
+) -> List[Finding]:
+    """Scan a traced program's jaxpr text for hot-path violations."""
+    findings: List[Finding] = []
+    if QUANT_TOKEN in jaxpr_text:
+        findings.append(Finding(
+            checker="program",
+            rule="quant_in_hot_path",
+            severity="error",
+            message=(
+                "quantise rounding traced into the per-batch program — "
+                "weight prep must happen once in prepare_stack, never "
+                "inside the serving call"
+            ),
+            where=where,
+        ))
+    if "callback" in jaxpr_text:
+        findings.append(Finding(
+            checker="program",
+            rule="host_callback",
+            severity="error",
+            message=(
+                "host callback in the serving program — every batch would "
+                "synchronize with the Python host"
+            ),
+            where=where,
+        ))
+    if precision == "bf16":
+        matmul_dtypes: List[str] = []
+        for line in jaxpr_text.splitlines():
+            if _MATMUL_EQN_RE.search(line):
+                lhs = line.split("=", 1)[0]
+                matmul_dtypes.extend(_OUT_DTYPE_RE.findall(lhs))
+        if matmul_dtypes and "bf16" not in matmul_dtypes:
+            findings.append(Finding(
+                checker="program",
+                rule="fp32_upcast",
+                severity="warning",
+                message=(
+                    "bf16 plan, but every conv/dot in the program emits "
+                    f"{sorted(set(matmul_dtypes))} — on-chip compute "
+                    "silently upcast to full precision"
+                ),
+                where=where,
+            ))
+    return findings
+
+
+def audit_hlo(hlo_text: str, *, where: str = "") -> List[Finding]:
+    """Scan optimized HLO for host transfers and callback custom-calls."""
+    from repro.roofline.hlo_parse import _split_computations
+
+    findings: List[Finding] = []
+    transfers: List[str] = []
+    callbacks: List[str] = []
+    for comp_ops in _split_computations(hlo_text).values():
+        for op in comp_ops:
+            if not hasattr(op, "opcode"):
+                continue
+            if op.opcode in HOST_TRANSFER_OPCODES:
+                transfers.append(op.opcode)
+            elif op.opcode == "custom-call" and "callback" in op.rest:
+                callbacks.append(op.name)
+    if transfers:
+        findings.append(Finding(
+            checker="program",
+            rule="host_transfer",
+            severity="error",
+            message=(
+                f"host-transfer ops in compiled program: "
+                f"{sorted(set(transfers))} — the serving loop would stall "
+                "on host I/O every dispatch"
+            ),
+            where=where,
+        ))
+    if callbacks:
+        findings.append(Finding(
+            checker="program",
+            rule="host_callback",
+            severity="error",
+            message=(
+                f"{len(callbacks)} callback custom-call(s) in compiled "
+                "program — every batch round-trips through the Python host"
+            ),
+            where=where,
+        ))
+    return findings
+
+
+def _entry_where(entry) -> str:
+    p = entry.plan
+    return (
+        f"executor {p.backend}/{p.precision} {p.height}x{p.width} "
+        f"bucket={entry.bucket} {entry.dtype}"
+    )
+
+
+def audit_entry(session, entry, *, compiled: bool = True) -> List[Finding]:
+    """Audit ONE cached executor: its traced jaxpr, its optimized HLO
+    (``compiled=True``; cached keys re-lower from jax's internal caches),
+    and its donation bookkeeping against the session's resolved policy."""
+    import jax
+
+    from repro.engine.executor import executor_artifacts
+
+    plan = entry.plan
+    where = _entry_where(entry)
+    rec = session._stacks.get(entry.stack_key)
+    stack = rec.stack if rec is not None else None
+    arts = executor_artifacts(
+        plan, stack, entry.bucket, entry.dtype,
+        layers=session.layers, compiled=compiled,
+    )
+    findings = audit_jaxpr(
+        arts["jaxpr"], precision=plan.precision, where=where
+    )
+    if arts["hlo"] is not None:
+        findings.extend(audit_hlo(arts["hlo"], where=where))
+
+    requested = session._resolve_donate()
+    built = bool(getattr(entry.fn, "donates_frames", entry.donates))
+    if bool(entry.donates) != built:
+        findings.append(Finding(
+            checker="program",
+            rule="donation_bookkeeping",
+            severity="error",
+            message=(
+                f"cache entry records donates={entry.donates} but the "
+                f"executor was built with donate_frames={built}"
+            ),
+            where=where,
+        ))
+    elif requested and not entry.donates:
+        findings.append(Finding(
+            checker="program",
+            rule="missing_donation",
+            severity="error",
+            message=(
+                "session resolves donate_frames=True but this executor "
+                "was compiled without donation — the bucket slab stays "
+                "pinned for the whole call"
+            ),
+            where=where,
+        ))
+    elif entry.donates and jax.default_backend() == "cpu":
+        findings.append(Finding(
+            checker="program",
+            rule="donation_ignored",
+            severity="info",
+            message=(
+                "executor donates its frame batch, but XLA:CPU does not "
+                "implement input-output aliasing — donation is a no-op "
+                "here (harmless)"
+            ),
+            where=where,
+        ))
+    return findings
+
+
+def audit_session(session, *, compiled: bool = True) -> List[Finding]:
+    """Audit EVERY executor the session's PlanCache currently holds, plus
+    the per-key compile counters (recompile detection)."""
+    findings: List[Finding] = []
+    for entry in session._cache.entries():
+        findings.extend(audit_entry(session, entry, compiled=compiled))
+    for key, count in session._compile_counts.items():
+        if count > 1:
+            plan, bucket, dtype = key
+            findings.append(Finding(
+                checker="program",
+                rule="recompile",
+                severity="warning",
+                message=(
+                    f"cache key compiled {count} times (evicted and "
+                    "re-missed) — steady-state traffic paid a hidden "
+                    "compile; consider a larger cache_capacity"
+                ),
+                where=(
+                    f"executor {plan.backend}/{plan.precision} "
+                    f"{plan.height}x{plan.width} bucket={bucket} {dtype}"
+                ),
+            ))
+    return findings

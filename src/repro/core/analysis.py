@@ -28,6 +28,8 @@ __all__ = [
     "buffer_sizes",
     "classical_buffer_sizes",
     "dram_traffic",
+    "dram_reduction",
+    "on_chip_budget_kb",
     "pe_throughput_model",
     "PAPER_TABLE2",
     "PAPER_CLAIMS",
@@ -180,6 +182,16 @@ def dram_traffic(cfg: HWConfig = HWConfig(), mode: str = "fused") -> Dict[str, f
         raise ValueError(f"unknown mode {mode!r}")
     gb_s = per_frame * cfg.fps / 1e9
     return {"bytes_per_frame": per_frame, "gb_s": gb_s}
+
+
+def on_chip_budget_kb(cfg: HWConfig = HWConfig()) -> float:
+    """Table II's bottom line for the configured geometry, in decimal KB.
+
+    This is the reference budget the static plan verifier
+    (``repro.analysis.plan_check``) holds the Pallas kernel's real scratch
+    allocation against; for the paper's design point it is 102.36 KB.
+    """
+    return buffer_sizes(cfg)["total_kb"]
 
 
 def dram_reduction(cfg: HWConfig = HWConfig()) -> float:

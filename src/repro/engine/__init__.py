@@ -49,6 +49,7 @@ from repro.engine.executor import (
     PreparedStack,
     build_executor,
     build_stack_executor,
+    executor_artifacts,
     output_spec,
     plan_cost,
     prepare_layers,
@@ -99,6 +100,7 @@ __all__ = [
     "VERTICAL_POLICIES",
     "build_executor",
     "build_stack_executor",
+    "executor_artifacts",
     "output_spec",
     "plan_cost",
     "prepare_layers",

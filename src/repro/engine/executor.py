@@ -39,6 +39,7 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fusion import (
     ConvLayer,
@@ -59,6 +60,7 @@ __all__ = [
     "PreparedStack",
     "build_executor",
     "build_stack_executor",
+    "executor_artifacts",
     "output_spec",
     "plan_cost",
     "run",
@@ -236,7 +238,8 @@ def _execute_stack(
     This is what serving compiles: weight preparation happened when the
     :class:`PreparedStack` was built, so the jitted program contains ONLY
     the conv datapath + epilogue — no quantise round-trip, no kernel weight
-    scatter (asserted by the jaxpr test in ``tests/test_pipeline.py``).
+    scatter (enforced by the ``repro.analysis.program_audit`` hot-path
+    pass, which CI runs over every cached executor).
     """
     if frames.ndim != 4:
         raise ValueError(
@@ -373,6 +376,48 @@ def plan_cost(
         "hbm_bytes_per_frame": int(cost.hbm_bytes // batch),
         "weight_bytes_resident": int(stack.nbytes()),
     }
+
+
+def executor_artifacts(
+    plan: SRPlan,
+    stack: Optional[PreparedStack],
+    batch: int,
+    dtype=jnp.float32,
+    *,
+    layers: Optional[Sequence[ConvLayer]] = None,
+    compiled: bool = True,
+) -> dict:
+    """The compiler-facing artifacts of the serving executor for one
+    bucket: the traced jaxpr text and (``compiled=True``) the optimized
+    HLO text — what ``repro.analysis.program_audit`` scans for forbidden
+    patterns (quant ops, host callbacks/transfers, silent upcasts).
+
+    Pass ``stack`` to audit exactly what serving runs
+    (``_execute_stack`` over a :class:`PreparedStack`); pass ``layers``
+    with ``stack=None`` to build the stack here.  Tracing is abstract
+    (``ShapeDtypeStruct`` input) so no frame buffer is allocated; the
+    compile (HLO path only) hits jax's internal caches when the session
+    already compiled this key.
+    """
+    if stack is None:
+        if layers is None:
+            raise ValueError("need a PreparedStack or raw layers")
+        stack = prepare_stack(plan, layers)
+    spec = jax.ShapeDtypeStruct((int(batch), *plan.lr_shape), dtype)
+    jaxpr = jax.make_jaxpr(
+        functools.partial(_execute_stack, plan, stack)
+    )(spec)
+    out = {
+        "plan": plan,
+        "batch": int(batch),
+        "dtype": np.dtype(jax.dtypes.canonicalize_dtype(np.dtype(dtype))).name,
+        "jaxpr": str(jaxpr),
+        "hlo": None,
+    }
+    if compiled:
+        jitted = jax.jit(_execute_stack, static_argnums=0)
+        out["hlo"] = jitted.lower(plan, stack, spec).compile().as_text()
+    return out
 
 
 def output_spec(

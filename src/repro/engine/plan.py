@@ -204,6 +204,17 @@ class SRPlan:
         for every (tile, layer)."""
         self.schedule.check_invariants()
 
+    def verify(self, **kwargs):
+        """Statically verify this plan (band coverage, halo sufficiency,
+        Table II on-chip budget) and return the list of
+        :class:`~repro.analysis.findings.Finding` diagnostics — empty when
+        clean.  Keyword overrides (``channels``, ``budget_kb``,
+        ``halo_margin``) pass through to
+        :func:`repro.analysis.plan_check.verify_plan`."""
+        from repro.analysis.plan_check import verify_plan  # lazy: no cycle
+
+        return verify_plan(self, **kwargs)
+
     # ------------------------------------------------------------------
     # Construction from a serving request
     # ------------------------------------------------------------------

@@ -303,6 +303,7 @@ class SRSession:
         autotune: str = "cached",
         tuner=None,
         tuning_db: Optional[str] = None,
+        strict: bool = False,
     ):
         layers = tuple(layers)
         if not layers:
@@ -355,6 +356,16 @@ class SRSession:
             )
         self._tuning_counts = {"hits": 0, "misses": 0, "fallbacks": 0,
                                "applied": 0, "tuned_now": 0}
+        # strict=True statically verifies every derived plan
+        # (repro.analysis.plan_check) and refuses error-level findings
+        # BEFORE anything compiles; degenerate one-giant-band fallbacks
+        # are counted either way and surface in tuning_stats()
+        self.strict = bool(strict)
+        self._degenerate_plans = 0
+        # per-cache-key compile counter: an entry evicted and re-missed
+        # compiles again — the recompile detector (repro.analysis
+        # .program_audit) flags keys whose count exceeds one
+        self._compile_counts: Dict[tuple, int] = {}
         # request batch sizes whose measured-best bucket policy is "exact"
         # (compile the true batch instead of rounding up to a power of two)
         self._exact_buckets: set = set()
@@ -511,8 +522,23 @@ class SRSession:
             tuner=tuner,
             bucket=batch_hint,
         )
+        if plan.degenerate_bands:
+            self._degenerate_plans += 1
+        if self.strict:
+            self._verify_plan(plan)
         self._memo_put(self._plans, lr_shape, plan)
         return plan
+
+    def _verify_plan(self, plan: SRPlan) -> None:
+        """Strict-mode gate: statically verify the derived plan and raise
+        :class:`~repro.analysis.findings.PlanVerificationError` on any
+        error-level finding — BEFORE weight prep or compilation."""
+        from repro.analysis import findings as _findings  # lazy: no cycle
+        from repro.analysis import plan_check  # lazy: no cycle
+
+        errs = _findings.errors(plan_check.verify_plan(plan))
+        if errs:
+            raise _findings.PlanVerificationError(errs)
 
     # ------------------------------------------------------------------
     # Schedule autotuning (engine.autotune)
@@ -591,6 +617,7 @@ class SRSession:
             "mode": self.autotune,
             "db_path": self._tuner.db.path if self._tuner else None,
             **self._tuning_counts,
+            "degenerate_plans": self._degenerate_plans,
             "pipeline_depth": self.pipeline_depth,
             "exact_buckets": sorted(self._exact_buckets),
         }
@@ -702,6 +729,7 @@ class SRSession:
             stack_key=skey,
             donates=donate,
         )
+        self._compile_counts[key] = self._compile_counts.get(key, 0) + 1
         self._cache.put(key, entry)
         return entry, True
 
@@ -880,6 +908,9 @@ class SRSession:
         refcounts, one-time prepare seconds and resident bytes.
         """
         stats = self._cache.stats()
+        stats["recompiles"] = sum(
+            c - 1 for c in self._compile_counts.values() if c > 1
+        )
         stats["entries"] = [
             {
                 "lr_shape": list(e.plan.lr_shape),

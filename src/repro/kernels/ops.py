@@ -40,7 +40,9 @@ def default_interpret() -> bool:
 
 
 def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+    # Delegates to the kernel's canonical padding rule so ops-level packing
+    # and the static analyser (repro.analysis.plan_check) count identically.
+    return _tilted.round_up_channels(x, m)
 
 
 def pack_layers(layers: Sequence[ConvLayer], chp: Optional[int] = None, dtype=None):

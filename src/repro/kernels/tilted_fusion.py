@@ -48,7 +48,137 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["tilted_fusion_kernel", "tilted_fusion_call"]
+__all__ = [
+    "tilted_fusion_kernel",
+    "tilted_fusion_call",
+    "round_up_channels",
+    "scratch_shapes",
+    "kernel_buffers",
+]
+
+
+def round_up_channels(n: int, multiple: int = 8) -> int:
+    """The kernel's channel-padding rule: round up to the TPU sublane
+    multiple (8).  ``ops.pack_layers`` and the static analyser both go
+    through this, so padded storage and the verifier's byte accounting can
+    never drift apart."""
+    return -(-int(n) // multiple) * multiple
+
+
+def scratch_shapes(num_layers: int, band_rows: int, tile_cols: int,
+                   chp: int, c0p: int):
+    """The kernel's persistent VMEM scratch shapes — ``(overlap_queue,
+    residual_ring)`` — as plain tuples.
+
+    This is the ONE definition of the scratch geometry: the
+    ``pallas_call`` launch below allocates exactly these shapes, and the
+    static plan verifier (``repro.analysis.plan_check``) computes its
+    on-chip budget from them.
+    """
+    overlap = (num_layers, band_rows, 2, chp)
+    residual = (band_rows, tile_cols + num_layers, c0p)
+    return overlap, residual
+
+
+def _elems(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def kernel_buffers(
+    *,
+    channels,  # Sequence[int]: feature-map channel counts F_0..F_L
+    band_rows: int,
+    tile_cols: int,
+    chp: int = None,
+) -> dict:
+    """Static introspection of every on-chip buffer ``tilted_fusion_call``
+    allocates for one grid step, in ELEMENTS (dtype-free).
+
+    For each buffer the entry carries the padded ``shape`` the launch
+    really allocates (channels rounded up to the sublane multiple — the
+    ``elements`` count) and the ``logical_elements`` the algorithm
+    fundamentally retains (unpadded channels — the quantity the paper's
+    eqs. (1)-(3) count).  ``repro.analysis.plan_check`` cross-checks the
+    logical counts against ``core.analysis.buffer_sizes`` (Table II) and
+    budget-gates the padded totals.
+
+    Buffers:
+      * ``overlap``    — the persistent overlap-queue VMEM scratch
+        (paper eq. 2; here L slots, one per fused layer, vs the RTL's L+2).
+      * ``residual``   — the residual-ring VMEM scratch (paper eq. 3).
+      * ``stream_in``  — the fresh-column input block + first-column block
+        streamed per grid step (the tilt's replacement for half the
+        ping-pong pair).
+      * ``stream_out`` — the output block written per grid step.
+      * ``weights``/``bias`` — the packed weight/bias blocks resident in
+        VMEM across the whole launch.
+      * ``row_bounds`` — the per-band SMEM scalars (bytes, not elements —
+        always int32).
+    """
+    channels = [int(c) for c in channels]
+    L = len(channels) - 1
+    if L < 1:
+        raise ValueError(f"channels {channels!r} must list F_0..F_L, L >= 1")
+    R, C = int(band_rows), int(tile_cols)
+    chmax, ch0, chl = max(channels), channels[0], channels[-1]
+    chp = int(chp) if chp else round_up_channels(chmax)
+    c0p = round_up_channels(ch0)
+    overlap_shape, residual_shape = scratch_shapes(L, R, C, chp, c0p)
+    buffers = {
+        "overlap": {
+            "shape": overlap_shape,
+            "elements": _elems(overlap_shape),
+            "logical_elements": L * R * 2 * chmax,
+        },
+        "residual": {
+            "shape": residual_shape,
+            "elements": _elems(residual_shape),
+            "logical_elements": ch0 * R * (C + L),
+        },
+        "stream_in": {
+            # x block (1, R, C, c0p) + first_col block (1, R, 1, c0p)
+            "shape": (1, R, C + 1, c0p),
+            "elements": R * (C + 1) * c0p,
+            "logical_elements": ch0 * R * (C + 1),
+        },
+        "stream_out": {
+            "shape": (1, R, C, chp),
+            "elements": R * C * chp,
+            "logical_elements": chl * R * C,
+        },
+        "weights": {
+            "shape": (L, 3, 3, chp, chp),
+            "elements": L * 9 * chp * chp,
+            "logical_elements": sum(
+                9 * channels[i] * channels[i + 1] for i in range(L)
+            ),
+        },
+        "bias": {
+            "shape": (L, chp),
+            "elements": L * chp,
+            "logical_elements": sum(channels[1:]),
+        },
+    }
+    report = {
+        "num_layers": L,
+        "band_rows": R,
+        "tile_cols": C,
+        "chp": chp,
+        "c0p": c0p,
+        "buffers": buffers,
+        "row_bounds_smem_bytes": 2 * 4,  # (1, 2) int32 per grid step
+        "scratch_elements": (
+            buffers["overlap"]["elements"] + buffers["residual"]["elements"]
+        ),
+        "total_elements": sum(b["elements"] for b in buffers.values()),
+        "total_logical_elements": sum(
+            b["logical_elements"] for b in buffers.values()
+        ),
+    }
+    return report
 
 
 def _conv_tile_mxu(f, w_l, b_l, R: int, C: int, chp: int, acc_dtype, row_policy: str):
@@ -248,8 +378,8 @@ def tilted_fusion_call(
         out_specs=pl.BlockSpec((1, R, C, chp), lambda bnd, k: (bnd, 0, k, 0)),
         out_shape=jax.ShapeDtypeStruct((B, R, KC, chp), out_dtype),
         scratch_shapes=[
-            pltpu.VMEM((L, R, 2, chp), compute_dtype),
-            pltpu.VMEM((R, C + L, c0p), compute_dtype),
+            pltpu.VMEM(shape, compute_dtype)
+            for shape in scratch_shapes(L, R, C, chp, c0p)
         ],
         interpret=interpret,
     )(first_col, x_stream, w, b, row_bounds)

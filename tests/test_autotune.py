@@ -466,7 +466,8 @@ def test_off_mode_never_touches_db(tmp_path):
     ts = session.tuning_stats()
     assert ts == {"mode": "off", "db_path": None, "hits": 0, "misses": 0,
                   "fallbacks": 0, "applied": 0, "tuned_now": 0,
-                  "pipeline_depth": 2, "exact_buckets": []}
+                  "pipeline_depth": 2, "exact_buckets": [],
+                  "degenerate_plans": 0}
 
 
 def test_explicit_pipeline_depth_never_overridden(tmp_path):

@@ -50,18 +50,25 @@ def small_session(**kw):
 def test_weight_prep_absent_from_jitted_program():
     """The serving executor's traced program contains NO quantisation ops:
     the int8 round-trip (jnp.round/clip) runs once in prepare_stack, so the
-    per-batch jaxpr is pure conv datapath.  The legacy self-contained path
-    keeps tracing it in — the control that the assertion means something."""
+    per-batch jaxpr is pure conv datapath.  Enforced through the SAME
+    ``program_audit`` pass CI runs (not a bespoke token match); the legacy
+    self-contained path keeps tracing the round-trip in — the control that
+    the audit rule means something."""
+    from repro.analysis import program_audit
+
     plan = engine.make_plan(LAYERS, LR, band_rows=12, backend="tilted",
                             precision="int8")
     stack = engine.prepare_stack(plan, LAYERS)
+    arts = executor_mod.executor_artifacts(
+        plan, stack, 2, compiled=False
+    )
+    assert program_audit.audit_jaxpr(arts["jaxpr"], precision="int8") == []
     dummy = jnp.zeros((2, *LR))
-    prepared = str(jax.make_jaxpr(
-        lambda s, f: executor_mod._execute_stack(plan, s, f))(stack, dummy))
     legacy = str(jax.make_jaxpr(
         lambda l, f: executor_mod._execute(plan, l, f))(list(LAYERS), dummy))
-    assert "round" in legacy  # the quantise round-trip used to trace in
-    assert "round" not in prepared
+    rules = [f.rule for f in
+             program_audit.audit_jaxpr(legacy, precision="int8")]
+    assert "quant_in_hot_path" in rules  # the round-trip used to trace in
 
 
 def test_prepare_stack_runs_once_per_session_numerics(monkeypatch):
