@@ -33,6 +33,8 @@ from engine_throughput import (  # noqa: E402
     ROOFLINE_KEYS,
     SERVER_KEYS,
     SERVER_MODE_KEYS,
+    SHARDING_KEYS,
+    SHARDING_POINT_KEYS,
 )
 
 
@@ -122,6 +124,25 @@ def check_record(rec: dict) -> list:
             "analysis.clean must be true — perf numbers from a tree that "
             "violates its own static invariants are not comparable"
         )
+    sharding = rec.get("sharding", {})
+    _require(sharding, SHARDING_KEYS, "sharding", errors)
+    points = sharding.get("points", [])
+    if not points:
+        errors.append("sharding.points must hold at least one scaling point")
+    for i, p in enumerate(points):
+        _require(p, SHARDING_POINT_KEYS, f"sharding.points[{i}]", errors)
+        if p.get("bit_exact") is not True:
+            errors.append(
+                f"sharding.points[{i}] "
+                f"({p.get('replicas')}x{p.get('band_shards')}): bit_exact "
+                "must be true — sharded execution changed the output"
+            )
+    if points and not any(p.get("devices", 0) > 1 for p in points):
+        errors.append(
+            "sharding.points must include at least one multi-device "
+            "topology — a 1-device-only curve proves nothing about the "
+            "sharded executor"
+        )
     return errors
 
 
@@ -143,11 +164,17 @@ def main(argv) -> int:
                 (t["speedup"] for t in rec["autotune"]["configs"]),
                 default=0.0,
             )
+            shard_best = max(
+                (p["scaling"] for p in rec["sharding"]["points"]
+                 if p["devices"] > 1),
+                default=0.0,
+            )
             print(f"{path}: ok "
                   f"(pipelined x{rec['pipeline']['speedup']} vs sync, "
                   f"tuned_depth={rec['pipeline']['tuned_depth']}, "
                   f"coalesced x{rec['server']['speedup']} vs solo, "
                   f"autotune best x{tuned_best}, "
+                  f"sharded best x{shard_best} vs 1 device, "
                   f"bit_exact={rec['pipeline']['bit_exact']})")
     return status
 

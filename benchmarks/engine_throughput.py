@@ -70,7 +70,7 @@ DEFAULT_BATCHES = (1, 4, 8)
 RECORD_KEYS = (
     "bench", "backend", "precision", "vertical_policy", "lr_shape",
     "band_rows", "jax_backend", "platform", "batch", "cache", "pipeline",
-    "roofline", "server", "autotune", "analysis",
+    "roofline", "server", "autotune", "analysis", "sharding",
 )
 BATCH_KEYS = (
     "frames_per_s", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
@@ -107,6 +107,16 @@ AUTOTUNE_CONFIG_KEYS = (
 # static-analysis gate outcome: per-checker finding counts + the verdict
 ANALYSIS_KEYS = ("concurrency", "plan", "program", "clean")
 ANALYSIS_SEVERITY_KEYS = ("error", "warning", "info")
+# mesh-sharded serving scaling curve (benchmarks/sharding_scaling.py,
+# run in a forced-multi-device subprocess); every point must be bit-exact
+SHARDING_KEYS = (
+    "device_count", "backend", "precision", "vertical_policy", "lr_shape",
+    "frames", "reps", "points", "skipped",
+)
+SHARDING_POINT_KEYS = (
+    "devices", "replicas", "band_shards", "frames_per_s", "scaling",
+    "halo_bytes_per_frame", "replica_fill", "bit_exact",
+)
 
 
 def _session(layers, cfg, args_like) -> SRSession:
@@ -320,6 +330,35 @@ def measure_autotune(layers, cfg, opts, *, batches, depths, reps) -> dict:
     }
 
 
+def measure_sharding(*, quick: bool = False, devices: int = 8) -> dict:
+    """The mesh-sharded serving scaling curve (the ``sharding`` section).
+
+    JAX fixes its device list at initialisation, so the multi-device sweep
+    cannot run in this (already single-device) process: spawn
+    ``benchmarks/sharding_scaling.py`` with forced host devices and adopt
+    its JSON record verbatim.
+    """
+    import subprocess
+    import sys
+
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "sharding_scaling.py")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, script, "--json-only"]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharding_scaling.py failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout)
+
+
 def measure_analysis() -> dict:
     """The static-verification gate's outcome, recorded alongside the
     perf sections: per-checker finding counts by severity plus the
@@ -348,6 +387,8 @@ def measure(
     srv_requests: int = 4,
     tune_batches=(1, 3, 4),
     tune_depths=(1, 2),
+    sharding_quick: bool = False,
+    sharding_devices: int = 8,
 ) -> dict:
     """The full benchmark record: per-batch-size stats, the pipelined-vs-
     sync clip comparison, the server coalesced-vs-solo comparison, and the
@@ -393,6 +434,8 @@ def measure(
         "roofline": roofline,
         "autotune": autotune,
         "analysis": measure_analysis(),
+        "sharding": measure_sharding(quick=sharding_quick,
+                                     devices=sharding_devices),
     }
 
 
@@ -400,7 +443,7 @@ def rows():
     """Harness rows (kept small: batch 1 and 4, few reps)."""
     t0 = time.perf_counter()
     rec = measure(batch_sizes=(1, 4), reps=3, pipe_bucket=2, pipe_chunks=4,
-                  tune_batches=(1, 3))
+                  tune_batches=(1, 3), sharding_quick=True)
     us = (time.perf_counter() - t0) * 1e6
     out = []
     for bs, r in rec["batch"].items():
@@ -427,6 +470,12 @@ def rows():
                     f"(x{t['speedup']:.2f}, bucket {t['bucket']} "
                     f"{t['bucket_policy']}, depth {t['pipeline_depth']}, "
                     f"{t['achieved_fraction']:.0%} of roofline)"))
+    for pt in rec["sharding"]["points"]:
+        out.append((f"engine.sharding.r{pt['replicas']}s{pt['band_shards']}",
+                    us,
+                    f"{pt['frames_per_s']:.1f} frames/s on {pt['devices']} "
+                    f"device(s) (x{pt['scaling']:.2f} vs 1, "
+                    f"bit_exact={pt['bit_exact']})"))
     c = rec["cache"]
     out.append(("engine.plan_cache", us,
                 f"{c['misses']} compiles, hit rate {c['hit_rate']:.2f}"))
@@ -471,7 +520,7 @@ def main():
         kw.update(height=24, width=16, batch_sizes=(1, 2), reps=2,
                   pipe_bucket=2, pipe_chunks=4,
                   srv_request_frames=1, srv_requests=2,
-                  tune_batches=(1, 3))
+                  tune_batches=(1, 3), sharding_quick=True)
     rec = measure(**kw)
     print("name,us_per_call,derived")
     for bs, r in rec["batch"].items():
@@ -512,6 +561,15 @@ def main():
               f'{t["bucket_policy"]}, depth {t["pipeline_depth"]}, band '
               f'{t["band_rows"]}, {t["achieved_fraction"]:.0%} of roofline, '
               f'{t["candidates_pruned"]}/{t["candidates_total"]} pruned)"')
+    for pt in rec["sharding"]["points"]:
+        print(f'engine.sharding.r{pt["replicas"]}s{pt["band_shards"]},0.0,'
+              f'"{pt["frames_per_s"]:.1f} frames/s on {pt["devices"]} '
+              f'device(s) (x{pt["scaling"]:.2f} vs 1 device, '
+              f'{pt["halo_bytes_per_frame"] / 1e3:.1f} kB halo/frame, '
+              f'fill {pt["replica_fill"]:.2f}, bit_exact={pt["bit_exact"]})"')
+    for s in rec["sharding"]["skipped"]:
+        print(f'# sharding skipped ({s["replicas"]}x{s["band_shards"]}): '
+              f'{s["reason"]}')
     c = rec["cache"]
     print(f'engine.plan_cache,0.0,"{c["misses"]} compiles {c["hits"]} hits '
           f'hit rate {c["hit_rate"]:.2f}"')

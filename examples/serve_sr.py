@@ -14,8 +14,17 @@ and ``server.stream(...)`` serves frame-at-a-time live video.  This demo:
 
 then prints the coalescing counters next to the serving latency stats.
 
+When more than one device is visible the server runs MESH-SHARDED: frame
+rows are band-sharded over a ``bands`` device axis (halo exchange at shard
+edges keeps outputs bit-exact) and dispatches are routed across replicas.
+``--mesh auto`` (the default) picks the largest topology every demo
+resolution can shard across; on a single device it falls back to ordinary
+serving.
+
     PYTHONPATH=src python examples/serve_sr.py --frames 16 --batch 4
     PYTHONPATH=src python examples/serve_sr.py --backend tilted --precision bf16
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/serve_sr.py --mesh auto
 """
 
 import argparse
@@ -25,6 +34,7 @@ import jax
 
 from repro.data.synthetic import sr_pair_batch
 from repro.engine import SRServer
+from repro.engine.plan import shardable_band_rows
 
 
 async def stream_clip(server, clip):
@@ -32,6 +42,16 @@ async def stream_clip(server, clip):
     async for hr in server.stream(list(clip), lookahead=4):
         outs.append(hr)
     return outs
+
+
+def pick_mesh(heights, devices):
+    """The largest (replicas, band_shards) serving mesh that fits the
+    visible devices AND can band-shard every resolution the demo serves;
+    None when only single-device serving is possible."""
+    for shards in range(min(devices, 8), 1, -1):
+        if all(shardable_band_rows(h, shards) is not None for h in heights):
+            return (max(1, devices // shards), shards)
+    return None
 
 
 def main():
@@ -56,8 +76,35 @@ def main():
                          "2 = double-buffered)")
     ap.add_argument("--max-inflight", type=int, default=None,
                     help="queue bound in frames (backpressure); default unbounded")
+    ap.add_argument("--mesh", default="auto",
+                    help='serving mesh "RxS" (replicas x band shards), '
+                         '"auto" to derive one from the visible devices, '
+                         '"off" to force single-device serving')
+    ap.add_argument("--route", default="least_loaded",
+                    choices=["round_robin", "least_loaded"],
+                    help="replica routing policy (multi-replica meshes)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    devices = jax.device_count()
+    if args.mesh == "auto":
+        mesh = pick_mesh((args.height, args.height // 2), devices)
+    elif args.mesh == "off":
+        mesh = None
+    else:
+        r, s = (int(x) for x in args.mesh.split("x"))
+        mesh = (r, s)
+    if mesh is not None and mesh[0] * mesh[1] <= 1:
+        mesh = None
+    if mesh is None:
+        print(f"single-device serving ({devices} device(s) visible; set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 to demo "
+              "the sharded path)")
+    else:
+        print(f"mesh serving: {mesh[0]} replica(s) x {mesh[1]} band "
+              f"shard(s) over {mesh[0] * mesh[1]} of {devices} visible "
+              f"device(s), route={args.route}")
+    mesh_kw = {} if mesh is None else {"mesh": mesh, "route": args.route}
 
     server = SRServer.open(
         args.model,
@@ -67,6 +114,7 @@ def main():
         pipeline_depth=args.pipeline_depth,
         max_inflight_frames=args.max_inflight,
         seed=args.seed,
+        **mesh_kw,
     )
     session = server.session()
 
@@ -122,6 +170,13 @@ def main():
     print(f"plan cache: {c['misses']} compiles, {c['hits']} hits, "
           f"hit rate {c['hit_rate']:.2f}; buckets "
           f"{[(tuple(e['lr_shape'][:2]), e['bucket'], round(e['compile_s'], 2)) for e in c['entries']]}")
+    sh = session.sharding_stats()
+    if sh is not None:
+        print(f"sharding: mesh {sh['mesh']} ({sh['policy']}), replica fill "
+              f"{sh['replica_fill']:.2f}, halo "
+              f"{sh['halo_bytes_per_frame'] / 1e3:.1f} kB/frame, "
+              f"dispatches per replica "
+              f"{[r['dispatches'] for r in sh['replicas']]}")
     pix = args.height * args.width * session.scale ** 2
     print(f"modeled accelerator: {pix/1e6:.2f} Mpix/frame at 124.4 Mpix/s -> "
           f"{pix/124.4e6*1e3:.2f} ms/frame @600 MHz")

@@ -158,6 +158,70 @@ def _check_halo(plan, findings: List[Finding], where: str,
         ))
 
 
+def _check_shards(plan, findings: List[Finding], where: str,
+                  band_shards: Optional[int],
+                  shard_halo_margin: Optional[int]) -> None:
+    """Band-sharded serving (``engine.sharding``) invariants.
+
+    A shard boundary is a band boundary that additionally crosses devices:
+    the bands must split into equal per-device blocks, and under the
+    ``halo`` policy the exchanged shard-edge margin must still cover the
+    stack's receptive-field growth (L rows per side) — a short exchange
+    would read stale rows from the neighbour shard, silently, because the
+    in-shard bands still validate.
+    """
+    if not band_shards or int(band_shards) <= 1:
+        return
+    band_shards = int(band_shards)
+    if plan.backend == "reference":
+        findings.append(Finding(
+            checker="plan",
+            rule="shard_backend",
+            severity="error",
+            message=(
+                "reference backend computes over the full frame and "
+                f"cannot band-shard {band_shards} ways — use the tilted "
+                "or kernel backend"
+            ),
+            where=where,
+        ))
+        return
+    bands, rem = divmod(plan.height, plan.band_rows)
+    if rem != 0:
+        return  # band_coverage already reported the broken geometry
+    if bands % band_shards != 0:
+        findings.append(Finding(
+            checker="plan",
+            rule="shard_band_alignment",
+            severity="error",
+            message=(
+                f"{bands} bands do not split into {band_shards} equal "
+                "shards — each device must own whole bands "
+                f"(height {plan.height}, band_rows {plan.band_rows})"
+            ),
+            where=where,
+        ))
+        return
+    if plan.vertical_policy != "halo":
+        return  # zero/replicate bands are independent: no shard coupling
+    need = required_halo_margin(plan.num_layers)
+    have = (int(shard_halo_margin) if shard_halo_margin is not None
+            else measured_halo_margin(plan.band_rows, plan.num_layers))
+    if have < need:
+        findings.append(Finding(
+            checker="plan",
+            rule="shard_halo_sufficiency",
+            severity="error",
+            message=(
+                f"shard edges exchange {have} margin rows per side but "
+                f"{plan.num_layers} stacked 3x3 layers need {need} — "
+                "bands at device boundaries would read stale neighbour "
+                "rows"
+            ),
+            where=where,
+        ))
+
+
 def _check_schedule(plan, findings: List[Finding], where: str) -> None:
     try:
         plan.check_invariants()
@@ -210,12 +274,18 @@ def verify_plan(
     channels: Optional[Sequence[int]] = None,
     budget_kb: Optional[float] = None,
     halo_margin: Optional[int] = None,
+    band_shards: Optional[int] = None,
+    shard_halo_margin: Optional[int] = None,
 ) -> List[Finding]:
     """Statically verify a plan-like object; returns all findings (possibly
     empty).  ``channels`` supplies the model's real feature-map widths for
     the budget check (defaults to ABPN when the geometry matches);
     ``budget_kb`` and ``halo_margin`` override the Table II budget and the
     measured slab margin — test hooks for probing illegal geometry.
+    ``band_shards`` (> 1) additionally verifies band-sharded serving:
+    shard alignment and shard-edge halo sufficiency
+    (``shard_halo_margin`` overrides the exchanged margin the same way
+    ``halo_margin`` does in-shard).
     """
     findings: List[Finding] = []
     where = (
@@ -223,8 +293,11 @@ def verify_plan(
         f"{plan.height}x{plan.width} R={plan.band_rows} C={plan.tile_cols} "
         f"{plan.vertical_policy}"
     )
+    if band_shards and int(band_shards) > 1:
+        where += f" shards={int(band_shards)}"
     _check_band_coverage(plan, findings, where)
     _check_halo(plan, findings, where, halo_margin)
+    _check_shards(plan, findings, where, band_shards, shard_halo_margin)
     _check_schedule(plan, findings, where)
     _check_budget(plan, findings, where, channels, budget_kb)
     return findings

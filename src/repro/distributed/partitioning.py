@@ -33,7 +33,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = [
     "BASE_RULES",
+    "SR_RULES",
     "fsdp_rules",
+    "sr_rules",
     "axis_rules",
     "current_mesh",
     "logical_to_spec",
@@ -92,6 +94,24 @@ def long_context_rules(base: Optional[Dict[str, MeshAxes]] = None) -> Dict[str, 
     rules = dict(base or BASE_RULES)
     rules["kv_seq"] = "data"
     return rules
+
+
+# SR serving mesh (engine.sharding): frame batches are (N, H, W, C).  The
+# batch dim rides the 'replica' axis only at the routing layer (ReplicaRouter
+# dispatches whole micro-batches to one replica; compiled programs never see
+# it), and row bands shard over 'bands'.  Width/channels stay replicated —
+# the paper's tilted decomposition is row-wise, so the halo is row-only.
+SR_RULES: Dict[str, MeshAxes] = {
+    "sr_batch": "replica",
+    "sr_rows": "bands",
+    "sr_cols": None,
+    "sr_chan": None,
+}
+
+
+def sr_rules() -> Dict[str, MeshAxes]:
+    """Rule table for the SR serving mesh (fresh copy, safe to mutate)."""
+    return dict(SR_RULES)
 
 
 class _Ctx(threading.local):

@@ -30,6 +30,13 @@ persists winners in a JSON :class:`TuningDB`; sessions consult it on
 cold start (``SRSession.open(..., autotune="off"|"cached"|"full")``,
 ``session.tuning_stats()``).
 
+Serving is MESH-AWARE (sharding/): ``SRSession.open(..., mesh=(R, S))``
+band-shards every executor over a ``bands`` device axis (``shard_map`` +
+ppermute halo exchange at shard edges, bit-exact vs single-device) and
+routes coalesced dispatches across ``R`` replicas
+(:class:`ReplicaRouter`: round-robin / least-loaded, per-replica compile
+caches; ``session.sharding_stats()``).
+
 Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
 numerics, boundary policy, backend — and ``build_executor``/``run``
 (executor.py) compile it into a single jitted call over a batch of LR
@@ -55,6 +62,7 @@ from repro.engine.executor import (
     prepare_layers,
     prepare_stack,
     run,
+    sr_epilogue,
     sr_features,
 )
 from repro.engine.plan import (
@@ -65,6 +73,7 @@ from repro.engine.plan import (
     derive_band_rows,
     legal_band_rows,
     make_plan,
+    shardable_band_rows,
 )
 from repro.engine.scheduler import MicroBatchScheduler, QueueFullError
 from repro.engine.server import SRFuture, SRServer
@@ -74,6 +83,13 @@ from repro.engine.session import (
     SRSession,
     StreamStats,
     bucket_batch,
+)
+from repro.engine.sharding import (
+    ROUTE_POLICIES,
+    MeshSpec,
+    ReplicaRouter,
+    ShardedPlan,
+    build_sharded_executor,
 )
 from repro.engine.stream import VideoStream
 
@@ -107,7 +123,14 @@ __all__ = [
     "prepare_stack",
     "PreparedStack",
     "run",
+    "sr_epilogue",
     "sr_features",
+    "shardable_band_rows",
+    "MeshSpec",
+    "ShardedPlan",
+    "ReplicaRouter",
+    "ROUTE_POLICIES",
+    "build_sharded_executor",
     "VideoStream",
     "StreamStats",
 ]

@@ -100,7 +100,9 @@ __all__ = [
 # Bump when the entry layout or the meaning of a tuned knob changes —
 # loaders ignore any DB written under a different schema (stale entries
 # must never be misapplied to a new engine).
-SCHEMA_VERSION = 1
+# v2: entries carry a topology stamp (device_count + mesh_shape) so a
+# schedule tuned on one device layout is rejected on another.
+SCHEMA_VERSION = 2
 
 DB_ENV_VAR = "REPRO_SR_TUNING_DB"
 
@@ -201,6 +203,12 @@ class TuningEntry:
     jax_backend: str
     device_kind: str
     created: float  # unix seconds
+    # topology stamp: schedules are measured on ONE device layout and are
+    # invalid on any other (a 1-device winner says nothing about halo
+    # exchange cost on a 2x4 mesh).  mesh_shape is "RxS" (replicas x band
+    # shards); unsharded sessions are "1x1".
+    device_count: int = 1
+    mesh_shape: str = "1x1"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -220,12 +228,12 @@ class TuningDB:
 
     Layout::
 
-        {"schema": 1, "entries": {"<key.encode()>": {<TuningEntry>}, ...}}
+        {"schema": 2, "entries": {"<key.encode()>": {<TuningEntry>}, ...}}
 
     A file written under a different ``SCHEMA_VERSION`` is ignored
     wholesale (``stale_schema`` records that it happened); an entry
-    stamped with a different jax backend or device kind is ignored
-    per-lookup.  ``put`` keeps insertion order and evicts the oldest
+    stamped with a different jax backend, device kind, device count or
+    mesh shape is ignored per-lookup.  ``put`` keeps insertion order and evicts the oldest
     entries past ``capacity``; ``save`` writes a temp file in the target
     directory and ``os.replace``\\ s it — readers never see a torn file.
     """
@@ -260,9 +268,21 @@ class TuningDB:
     def keys(self) -> List[str]:
         return list(self._entries)
 
-    def get(self, key: TuningKey) -> Optional[TuningEntry]:
-        """The valid entry for ``key``, or None (wrong backend/device or
-        malformed entries are invalid, not errors)."""
+    def get(
+        self,
+        key: TuningKey,
+        *,
+        device_count: Optional[int] = None,
+        mesh_shape: str = "1x1",
+    ) -> Optional[TuningEntry]:
+        """The valid entry for ``key``, or None (wrong backend/device/
+        topology or malformed entries are invalid, not errors).
+
+        ``device_count`` defaults to the live ``jax.device_count()``;
+        ``mesh_shape`` is the consumer's serving topology ("RxS") — an
+        entry stamped with any other layout is rejected, never silently
+        reused.
+        """
         raw = self._entries.get(key.encode())
         if raw is None:
             return None
@@ -274,10 +294,19 @@ class TuningDB:
         if (entry.jax_backend != jax.default_backend()
                 or entry.device_kind != device_kind()):
             return None
+        if device_count is None:
+            device_count = jax.device_count()
+        if (entry.device_count != int(device_count)
+                or entry.mesh_shape != mesh_shape):
+            return None
         return entry
 
     def get_nearest_batch(
-        self, key: TuningKey
+        self,
+        key: TuningKey,
+        *,
+        device_count: Optional[int] = None,
+        mesh_shape: str = "1x1",
     ) -> Optional[Tuple[TuningEntry, int]]:
         """The valid entry matching ``key``'s configuration at the NEAREST
         tuned batch (the fallback when the exact batch was never swept);
@@ -296,7 +325,10 @@ class TuningDB:
                 best = (*rank, k)
         if best is None:
             return None
-        entry = self.get(dataclasses.replace(key, batch=best[1]))
+        entry = self.get(
+            dataclasses.replace(key, batch=best[1]),
+            device_count=device_count, mesh_shape=mesh_shape,
+        )
         return (entry, best[1]) if entry is not None else None
 
     def put(self, key: TuningKey, entry: TuningEntry) -> None:
@@ -637,6 +669,10 @@ def tune(
         jax_backend=jax.default_backend(),
         device_kind=device_kind(),
         created=time.time(),
+        # tune() measures the single-device executor: entries are only
+        # valid for an unsharded consumer on this exact device count
+        device_count=jax.device_count(),
+        mesh_shape="1x1",
     )
     if db is not None:
         db.put(TuningKey.from_plan(plan, batch), entry)
@@ -661,18 +697,26 @@ class PlanTuner:
     """
 
     def __init__(self, db: Optional[TuningDB] = None,
-                 path: Optional[str] = None):
+                 path: Optional[str] = None, *,
+                 device_count: Optional[int] = None,
+                 mesh_shape: str = "1x1"):
         self.db = db if db is not None else TuningDB(path)
+        # the consumer's topology: lookups only accept entries stamped
+        # with it (a sharded session never adopts 1-device winners)
+        self.device_count = device_count
+        self.mesh_shape = mesh_shape
 
     def lookup(
         self, key: TuningKey
     ) -> Tuple[Optional[TuningEntry], str]:
         """``(entry, kind)`` where kind is ``"hit"`` (exact batch),
         ``"fallback"`` (same config, nearest tuned batch) or ``"miss"``."""
-        entry = self.db.get(key)
+        topo = {"device_count": self.device_count,
+                "mesh_shape": self.mesh_shape}
+        entry = self.db.get(key, **topo)
         if entry is not None and self._safe(key, entry):
             return entry, "hit"
-        near = self.db.get_nearest_batch(key)
+        near = self.db.get_nearest_batch(key, **topo)
         if near is not None and self._safe(key, near[0]):
             return near[0], "fallback"
         return None, "miss"

@@ -64,6 +64,7 @@ __all__ = [
     "output_spec",
     "plan_cost",
     "run",
+    "sr_epilogue",
     "sr_features",
 ]
 
@@ -248,7 +249,20 @@ def _execute_stack(
     in_dtype = frames.dtype
     x = frames.astype(compute_dtype_for(plan.precision))
     feats = sr_features(plan, stack.layers, x, packed=stack.packed)
-    # ABPN's residual anchor (nearest-neighbour upsample after the shuffle);
+    return sr_epilogue(plan, x, feats, in_dtype)
+
+
+def sr_epilogue(
+    plan: SRPlan, x: jax.Array, feats: jax.Array, in_dtype
+) -> jax.Array:
+    """ABPN's residual epilogue: anchor add, pixel shuffle, clip, cast.
+
+    Shared between the single-device executor and the band-sharded one —
+    both paths assemble the HR batch from identical features, so any drift
+    here would break the sharded bit-exactness guarantee.  Row-block local:
+    ``depth_to_space`` maps LR row ``y`` to HR rows ``[y*s, y*s+s)``, so the
+    epilogue can run independently on each row shard.
+    """
     # make_anchor broadcasts over the frames axis, depth_to_space is vmapped.
     out = feats + make_anchor(x, plan.scale)
     hr = jax.vmap(lambda o: depth_to_space(o, plan.scale))(out)

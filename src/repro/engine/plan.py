@@ -25,6 +25,7 @@ __all__ = [
     "check_layer_channels",
     "derive_band_rows",
     "legal_band_rows",
+    "shardable_band_rows",
     "BACKENDS",
     "PRECISIONS",
     "VERTICAL_POLICIES",
@@ -87,6 +88,29 @@ def derive_band_rows(
     candidates = [d for d in legal_band_rows(height, preferred, min_rows)
                   if d <= preferred]
     return max(candidates) if candidates else height
+
+
+def shardable_band_rows(
+    height: int,
+    band_shards: int,
+    preferred: int = PREFERRED_BAND_ROWS,
+    min_rows: int = MIN_BAND_ROWS,
+) -> Optional[int]:
+    """Best legal ``band_rows`` whose band count splits across shards.
+
+    Band-sharded execution places ``num_bands // band_shards`` whole bands
+    on each device along the ``bands`` mesh axis, so it needs
+    ``(height // band_rows) % band_shards == 0`` on top of the usual
+    divisibility.  Returns the highest-preference such divisor from
+    :func:`legal_band_rows`, or ``None`` when no legal decomposition
+    exists (e.g. more shards than bands at every legal ``band_rows``).
+    """
+    if band_shards <= 0:
+        raise ValueError(f"band_shards={band_shards} must be positive")
+    for d in legal_band_rows(height, preferred, min_rows):
+        if (height // d) % band_shards == 0:
+            return d
+    return None
 
 
 def _is_degenerate_fallback(height: int, band_rows: int, preferred: int) -> bool:

@@ -103,6 +103,9 @@ class Dispatch:
     plan: object
     bucket: int
     tickets: List[Ticket]
+    # replica index the server routed this dispatch to (mesh serving;
+    # recorded at launch, None on single-device sessions)
+    replica: Optional[int] = None
 
     @property
     def real(self) -> int:
@@ -138,6 +141,9 @@ class MicroBatchScheduler:
         self.frames_dispatched = 0
         self.slots_dispatched = 0
         self.rejected = 0
+        # replica index -> dispatches routed there (mesh serving only;
+        # stays empty on single-device sessions)
+        self.replica_dispatches: Dict[int, int] = {}
         self.recent_dispatches: Deque[dict] = deque(maxlen=RECENT_DISPATCH_LOG)
 
     # ------------------------------------------------------------------
@@ -159,6 +165,12 @@ class MicroBatchScheduler:
     def note_empty_request(self) -> None:
         """An admitted zero-frame request (resolved without a dispatch)."""
         self.submitted_requests += 1
+
+    def note_routed(self, replica: int) -> None:
+        """A dispatch landed on a replica (server records it at launch)."""
+        self.replica_dispatches[replica] = (
+            self.replica_dispatches.get(replica, 0) + 1
+        )
 
     def has_pending(self) -> bool:
         return self.pending_frames > 0
@@ -280,4 +292,5 @@ class MicroBatchScheduler:
             "padded_frames": slots - self.frames_dispatched,
             "mean_fill_ratio": self.frames_dispatched / slots if slots else 0.0,
             "rejected": self.rejected,
+            "replica_dispatches": dict(self.replica_dispatches),
         }

@@ -526,6 +526,13 @@ class SRServer:
         except BaseException as e:
             self._fail_dispatch(d, e)
             return
+        # mesh serving: credit the routing decision — the scheduler's
+        # replica counters and the router's live load both key off it
+        d.replica = getattr(entry, "replica", None)
+        if d.replica is not None:
+            self._sched.note_routed(d.replica)
+            if session._router is not None:
+                session._router.note_launch(d.replica, d.real)
         sid = id(session)
         count = self._session_inflight.get(sid, 0)
         if count == 0:
@@ -594,6 +601,10 @@ class SRServer:
         d, session = inf.dispatch, inf.dispatch.session
         sid = id(session)
         now = time.perf_counter()
+        # release the replica's in-flight slot FIRST — device failures must
+        # not leave a replica looking permanently loaded
+        if d.replica is not None and session._router is not None:
+            session._router.note_complete(d.replica)
         self._inflight_frames -= d.real
         self._session_inflight[sid] -= 1
         if self._session_inflight[sid] == 0:

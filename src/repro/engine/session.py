@@ -185,6 +185,9 @@ class _CacheEntry:
     compile_s: float
     stack_key: tuple = ()
     donates: bool = False
+    # replica index when the entry was compiled by a ReplicaRouter (mesh
+    # serving); None for ordinary single-device executors
+    replica: Optional[int] = None
 
     @property
     def jitted(self):
@@ -304,6 +307,8 @@ class SRSession:
         tuner=None,
         tuning_db: Optional[str] = None,
         strict: bool = False,
+        mesh=None,
+        route: str = "least_loaded",
     ):
         layers = tuple(layers)
         if not layers:
@@ -324,6 +329,22 @@ class SRSession:
                 f"cache_capacity={cache_capacity} must be >= 1 "
                 "(the session needs at least one live compiled executor)"
             )
+        # mesh serving: resolve the topology FIRST — it gates autotune
+        # modes and stamps the tuner with the topology descriptor
+        self.mesh_spec = None
+        self._router = None
+        if mesh is not None:
+            from repro.engine.sharding import MeshSpec  # lazy: no cycle
+
+            spec = MeshSpec.coerce(mesh)
+            if not spec.is_trivial:
+                if autotune == "full":
+                    raise ValueError(
+                        'autotune="full" measures single-device schedules '
+                        "and cannot run on a sharded session; tune offline "
+                        'per topology and use "cached" or "off"'
+                    )
+                self.mesh_spec = spec
         self.layers = layers
         self.model = model
         self.backend = backend
@@ -352,7 +373,10 @@ class SRSession:
             from repro.engine.autotune import PlanTuner  # lazy: no cycle
 
             self._tuner = tuner if tuner is not None else PlanTuner(
-                path=tuning_db
+                path=tuning_db,
+                mesh_shape=(
+                    self.mesh_spec.descriptor if self.mesh_spec else "1x1"
+                ),
             )
         self._tuning_counts = {"hits": 0, "misses": 0, "fallbacks": 0,
                                "applied": 0, "tuned_now": 0}
@@ -398,6 +422,16 @@ class SRSession:
         # server that hosts this session, else an embedded single-model
         # server created lazily on first submit
         self._server = None
+        # mesh serving: the router owns per-replica compile caches + band-
+        # sharded executors; built EAGERLY so a too-small device pool fails
+        # at construction, not on the first request
+        if self.mesh_spec is not None:
+            from repro.engine.sharding import ReplicaRouter  # lazy: no cycle
+
+            self._router = ReplicaRouter(
+                self, self.mesh_spec, policy=route,
+                cache_capacity=cache_capacity,
+            )
 
     # ------------------------------------------------------------------
     # Constructors
@@ -522,12 +556,33 @@ class SRSession:
             tuner=tuner,
             bucket=batch_hint,
         )
+        if self.mesh_spec is not None:
+            plan = self._shardable_plan(plan)
         if plan.degenerate_bands:
             self._degenerate_plans += 1
         if self.strict:
             self._verify_plan(plan)
         self._memo_put(self._plans, lr_shape, plan)
         return plan
+
+    def _shardable_plan(self, plan: SRPlan) -> SRPlan:
+        """Make a derived plan legal for the session's mesh: re-band when
+        the default decomposition does not split across the band shards;
+        an EXPLICIT ``band_rows`` is the caller's decision and is rejected
+        (never silently re-banded) when it cannot shard."""
+        from repro.engine.sharding import check_shardable, ensure_shardable
+
+        if self.band_rows is not None:
+            err = check_shardable(plan, self.mesh_spec.band_shards)
+            if err is not None:
+                raise ValueError(
+                    f"explicit band_rows={self.band_rows} cannot serve on "
+                    f"mesh {self.mesh_spec.descriptor}: {err}"
+                )
+            return plan
+        return ensure_shardable(
+            plan, self.mesh_spec, self.preferred_band_rows
+        )
 
     def _verify_plan(self, plan: SRPlan) -> None:
         """Strict-mode gate: statically verify the derived plan and raise
@@ -536,7 +591,10 @@ class SRSession:
         from repro.analysis import findings as _findings  # lazy: no cycle
         from repro.analysis import plan_check  # lazy: no cycle
 
-        errs = _findings.errors(plan_check.verify_plan(plan))
+        kwargs = {}
+        if self.mesh_spec is not None:
+            kwargs["band_shards"] = self.mesh_spec.band_shards
+        errs = _findings.errors(plan_check.verify_plan(plan, **kwargs))
         if errs:
             raise _findings.PlanVerificationError(errs)
 
@@ -685,6 +743,8 @@ class SRSession:
         prepared weights they pinned (frees accelerator memory; the next
         request re-prepares and recompiles)."""
         self._cache.clear()
+        if self._router is not None:
+            self._router.clear()
 
     def executor_for(
         self, plan: SRPlan, bucket: int, dtype
@@ -696,7 +756,12 @@ class SRSession:
         zero dummy in the dtype that will actually be served, recording the
         compile seconds on the entry — so no later ``fn`` call on this key
         pays compilation or weight prep.  Returns ``(entry, compiled_now)``.
+
+        On a mesh session the call routes to a replica's band-sharded
+        executor instead (``entry.replica`` records which one).
         """
+        if self._router is not None:
+            return self._router.executor_for(plan, bucket, dtype)
         dtype = self.serving_dtype(dtype)
         key = self.cache_key(plan, bucket, dtype)
         entry = self._cache.get(key)
@@ -950,6 +1015,13 @@ class SRSession:
             peak_inflight=self._peak_inflight,
             **extra,
         )
+
+    def sharding_stats(self) -> Optional[dict]:
+        """Mesh routing stats (replica dispatch balance, per-replica
+        caches, halo bytes per frame); ``None`` on an unsharded session."""
+        if self._router is None:
+            return None
+        return self._router.stats()
 
     def reset_stats(self) -> None:
         self._dispatch_ms.clear()

@@ -57,6 +57,7 @@ def entry_for(plan: SRPlan, batch: int, **over) -> TuningEntry:
         default_ms=1.5, speedup=1.5,
         jax_backend=jax.default_backend(), device_kind=at.device_kind(),
         created=123.0,
+        device_count=jax.device_count(), mesh_shape="1x1",
     )
     base.update(over)
     return TuningEntry(**base)
@@ -183,6 +184,45 @@ def test_db_wrong_backend_or_device_rejected(tmp_path):
     assert db2.get(TuningKey.from_plan(plan, 2)) is None  # wrong device
     # entries are still PRESENT (not deleted) — just never applied here
     assert len(db2) == 2
+
+
+def test_db_wrong_topology_rejected(tmp_path):
+    """An entry tuned on one device layout must never apply on another
+    (PR 8 satellite: device_count + mesh_shape validity stamps)."""
+    path = str(tmp_path / "db.json")
+    plan = small_plan()
+    key = TuningKey.from_plan(plan, 1)
+    db = TuningDB(path)
+    db.put(key, entry_for(plan, 1, device_count=jax.device_count() + 7))
+    db.put(TuningKey.from_plan(plan, 2),
+           entry_for(plan, 2, mesh_shape="2x4"))
+    db.save()
+    db2 = TuningDB(path)
+    assert db2.get(key) is None  # wrong device count
+    assert db2.get(TuningKey.from_plan(plan, 2)) is None  # wrong mesh
+    # the consumer's own topology accepts it again
+    assert db2.get(key, device_count=jax.device_count() + 7) is not None
+    assert db2.get(TuningKey.from_plan(plan, 2),
+                   mesh_shape="2x4") is not None
+    # entries are still PRESENT (not deleted) — just never applied here
+    assert len(db2) == 2
+    # and a PlanTuner pinned to a topology only sees matching entries
+    tuner = PlanTuner(db2, mesh_shape="2x4")
+    entry, kind = tuner.lookup(TuningKey.from_plan(plan, 2))
+    assert kind == "hit" and entry.mesh_shape == "2x4"
+    assert PlanTuner(db2).lookup(key) == (None, "miss")
+
+
+def test_entry_missing_topology_stamp_rejected():
+    """Entries persisted before the topology stamp (schema v1 layout) are
+    malformed under v2 — from_dict must reject them even though the
+    dataclass fields now carry defaults."""
+    d = entry_for(small_plan(), 1).to_dict()
+    del d["device_count"]
+    assert TuningEntry.from_dict(d) is None
+    d2 = entry_for(small_plan(), 1).to_dict()
+    del d2["mesh_shape"]
+    assert TuningEntry.from_dict(d2) is None
 
 
 def test_db_malformed_and_torn_files_start_empty(tmp_path):

@@ -63,6 +63,41 @@ def test_pshard_is_identity_off_mesh():
 
 
 # ----------------------------------------------------------------------
+# SR serving rules (engine.sharding resolves frame batches through these)
+# ----------------------------------------------------------------------
+def test_sr_rules_is_a_copy():
+    rules = pt.sr_rules()
+    rules["sr_rows"] = "mangled"
+    assert pt.sr_rules()["sr_rows"] == "bands"
+    assert pt.SR_RULES["sr_rows"] == "bands"
+
+
+def test_sr_rules_resolve_on_full_serving_mesh():
+    mesh = FakeMesh((2, 4), ("replica", "bands"))
+    spec = pt.logical_to_spec(("sr_batch", "sr_rows", "sr_cols", "sr_chan"),
+                              mesh, pt.sr_rules())
+    assert spec == jax.sharding.PartitionSpec("replica", "bands", None, None)
+
+
+def test_sr_rules_drop_replica_on_band_submesh():
+    # each replica's executor compiles over a 1-D bands mesh: the batch
+    # axis must fall back to replication, rows stay band-sharded
+    mesh = FakeMesh((4,), ("bands",))
+    spec = pt.logical_to_spec(("sr_batch", "sr_rows", "sr_cols", "sr_chan"),
+                              mesh, pt.sr_rules())
+    assert spec == jax.sharding.PartitionSpec(None, "bands", None, None)
+
+
+def test_sr_rules_shape_aware_row_divisibility():
+    mesh = FakeMesh((4,), ("bands",))
+    # 48 rows / 4 band shards -> sharded; 42 rows do not divide -> replicated
+    ok = pt.shape_aware_spec(("sr_rows",), (48,), mesh, pt.sr_rules())
+    bad = pt.shape_aware_spec(("sr_rows",), (42,), mesh, pt.sr_rules())
+    assert ok == jax.sharding.PartitionSpec("bands")
+    assert bad == jax.sharding.PartitionSpec(None)
+
+
+# ----------------------------------------------------------------------
 # Multi-device behaviour (subprocess)
 # ----------------------------------------------------------------------
 @pytest.mark.slow
