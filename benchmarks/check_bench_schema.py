@@ -1,15 +1,20 @@
-"""Validate BENCH_engine.json against the schema the repo commits to.
+"""Validate committed benchmark records against their schemas.
 
-CI's bench-smoke job regenerates a quick record and runs this against both
-the fresh output and the committed BENCH_engine.json, so schema drift
-(renamed/dropped keys, a missing pipelined-mode entry, a broken
-bit-exactness guarantee) fails the build instead of silently rotting the
-recorded numbers.
+CI's bench-smoke and load-smoke jobs regenerate quick records and run
+this against both the fresh output and the committed JSON, so schema
+drift (renamed/dropped keys, a missing pipelined-mode entry, a broken
+bit-exactness or SLO guarantee) fails the build instead of silently
+rotting the recorded numbers.
 
     PYTHONPATH=src python benchmarks/check_bench_schema.py [path ...]
 
+Records are dispatched on their ``bench`` field: ``server_load``
+records (benchmarks/server_load.py) get the load-harness checks; any
+other record is assumed to be a BENCH_engine.json engine record.
+
 No third-party schema library: the required key sets live next to the
-producer (``engine_throughput.RECORD_KEYS`` etc.), so adding a field means
+producer (``engine_throughput.RECORD_KEYS``,
+``server_load.LOAD_RECORD_KEYS``, ...), so adding a field means
 updating producer and checker in the same place.
 """
 
@@ -35,6 +40,14 @@ from engine_throughput import (  # noqa: E402
     SERVER_MODE_KEYS,
     SHARDING_KEYS,
     SHARDING_POINT_KEYS,
+)
+from server_load import (  # noqa: E402
+    ACCEPTANCE_KEYS,
+    CALIBRATION_KEYS,
+    FAULT_KEYS,
+    LOAD_MODE_KEYS,
+    LOAD_POINT_KEYS,
+    LOAD_RECORD_KEYS,
 )
 
 
@@ -146,6 +159,73 @@ def check_record(rec: dict) -> list:
     return errors
 
 
+def check_server_load(rec: dict) -> list:
+    """All violations in one server_load record (empty list = valid)."""
+    errors: list = []
+    _require(rec, LOAD_RECORD_KEYS, "record", errors)
+    _require(rec.get("calibration", {}), CALIBRATION_KEYS,
+             "calibration", errors)
+    points = rec.get("points", [])
+    if not points:
+        errors.append("points must hold at least one load point")
+    for i, p in enumerate(points):
+        _require(p, LOAD_POINT_KEYS, f"points[{i}]", errors)
+        for mode in ("block", "hardened"):
+            _require(p.get(mode, {}), LOAD_MODE_KEYS,
+                     f"points[{i}].{mode}", errors)
+    acc = rec.get("acceptance", {})
+    _require(acc, ACCEPTANCE_KEYS, "acceptance", errors)
+    # the headline claim: at the overload point, shedding + degradation
+    # hold the served tail inside the SLO while plain blocking admission
+    # at the same offered rate does not
+    if acc.get("hardened_within_slo") is not True:
+        errors.append(
+            "acceptance.hardened_within_slo must be true — the hardened "
+            "server failed to hold its p99 inside the SLO at overload"
+        )
+    if acc.get("block_within_slo") is not False:
+        errors.append(
+            "acceptance.block_within_slo must be false — if blocking "
+            "admission also holds the SLO, the record never actually "
+            "overloaded the server and proves nothing"
+        )
+    if points:
+        top = points[-1].get("hardened", {})
+        if (top.get("shed", 0) or 0) + (top.get("deadline_missed", 0)
+                                        or 0) <= 0:
+            errors.append(
+                "points[-1].hardened must shed or expire at overload — "
+                "an SLO held without rejecting anything means the point "
+                "was not an overload"
+            )
+        if (top.get("degrade_transitions", 0) or 0) < 1:
+            errors.append(
+                "points[-1].hardened.degrade_transitions must be >= 1 — "
+                "the DegradePolicy never stepped down under overload"
+            )
+    fi = rec.get("fault_injection", {})
+    _require(fi, FAULT_KEYS, "fault_injection", errors)
+    if fi.get("neighbors_bit_exact") is not True:
+        errors.append(
+            "fault_injection.neighbors_bit_exact must be true — an "
+            "injected dispatch failure changed an UNAFFECTED request's "
+            "output"
+        )
+    if fi.get("served_after_failure") is not True:
+        errors.append(
+            "fault_injection.served_after_failure must be true — the "
+            "server stopped serving after an injected failure"
+        )
+    if fi.get("failed_requests") != fi.get("injected_failures"):
+        errors.append(
+            "fault_injection.failed_requests must equal "
+            "injected_failures — the blast radius leaked past the "
+            f"failed dispatch ({fi.get('failed_requests')} failed for "
+            f"{fi.get('injected_failures')} injected)"
+        )
+    return errors
+
+
 def main(argv) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     paths = argv[1:] or [os.path.join(root, "BENCH_engine.json")]
@@ -153,6 +233,24 @@ def main(argv) -> int:
     for path in paths:
         with open(path) as f:
             rec = json.load(f)
+        if rec.get("bench") == "server_load":
+            errors = check_server_load(rec)
+            if errors:
+                status = 1
+                print(f"{path}: SCHEMA DRIFT")
+                for e in errors:
+                    print(f"  - {e}")
+            else:
+                acc = rec["acceptance"]
+                top = rec["points"][-1]["hardened"]
+                print(f"{path}: ok "
+                      f"(@{acc['offered_rate_rps']} req/s hardened p99 "
+                      f"{acc['hardened_p99_ms']} ms <= SLO "
+                      f"{acc['slo_p99_ms']} ms, block p99 "
+                      f"{acc['block_p99_ms']} ms, shed {top['shed']}, "
+                      f"expired {top['deadline_missed']}, "
+                      f"degrade_level {top['degrade_level']})")
+            continue
         errors = check_record(rec)
         if errors:
             status = 1

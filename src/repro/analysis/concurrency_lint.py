@@ -21,6 +21,12 @@ An AST pass over the engine's serving sources (``server.py``,
   ``with A: ... with B:`` nesting contributes an A->B edge; a cycle in
   the resulting graph means two code paths can acquire the same pair of
   locks in opposite orders (deadlock-capable).
+* ``wall_clock`` — a ``time.time()`` call anywhere in a serving source:
+  deadline and latency arithmetic must use ``time.monotonic()`` /
+  ``time.perf_counter()``.  Wall clocks jump (NTP slew, manual resets),
+  and a backwards jump turns every queued deadline into "already
+  expired" — the deadline/shed paths this gate grew to cover are exactly
+  where that failure is silent and catastrophic.
 
 The pass is LEXICAL: it sees lock scopes and calls within one function
 body, not across call boundaries or aliasing — by design.  It is a
@@ -48,6 +54,7 @@ __all__ = [
     "default_lint_targets",
     "BLOCKING_CALLS",
     "SAFE_UNDER_LOCK",
+    "WALL_CLOCK_CALLS",
     "LOCK_NAME_RE",
 ]
 
@@ -65,6 +72,11 @@ BLOCKING_CALLS = frozenset({
 # Condition-variable methods that are the SANCTIONED way to block under a
 # lock (wait releases it; notify is non-blocking bookkeeping).
 SAFE_UNDER_LOCK = frozenset({"wait", "wait_for", "notify", "notify_all"})
+
+# Terminal names whose call reads the WALL clock — banned outright in
+# serving sources (deadline/latency math must survive NTP jumps).  The
+# monotonic family (monotonic, perf_counter) is the sanctioned clock.
+WALL_CLOCK_CALLS = frozenset({"time"})
 
 LOCK_NAME_RE = re.compile(
     r"(^|_)(lock|mutex|cv|cond|sem|semaphore)s?($|_)", re.IGNORECASE
@@ -154,6 +166,19 @@ class _FunctionLinter(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         name = _call_name(node)
+        if name in WALL_CLOCK_CALLS:
+            self.findings.append(Finding(
+                checker="concurrency",
+                rule="wall_clock",
+                severity="error",
+                message=(
+                    f"wall-clock call {name}() in serving code — deadline "
+                    "and latency math must use time.monotonic() or "
+                    "time.perf_counter(); an NTP jump would expire (or "
+                    "immortalize) every queued deadline at once"
+                ),
+                where=self._where(node),
+            ))
         if name in SAFE_UNDER_LOCK:
             pass  # CV wait/notify: the sanctioned pattern
         elif name in BLOCKING_CALLS:
@@ -274,10 +299,18 @@ def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
 
 def default_lint_targets(root: Optional[str] = None) -> List[Path]:
     """The engine's serving-loop sources — the files where a blocking
-    call under a lock stalls live traffic."""
+    call under a lock stalls live traffic.  ``runtime/resilience.py``
+    joined the set when the server grew deadline/degrade/injection paths
+    through it (its EMA core and FailureInjector run inside the serving
+    loop)."""
     base = Path(root) if root else Path(__file__).resolve().parents[1]
     eng = base / "engine"
-    return [eng / "server.py", eng / "scheduler.py", eng / "session.py"]
+    return [
+        eng / "server.py",
+        eng / "scheduler.py",
+        eng / "session.py",
+        base / "runtime" / "resilience.py",
+    ]
 
 
 def lint_files(paths: Optional[Iterable] = None) -> List[Finding]:

@@ -75,8 +75,18 @@ from repro.engine.plan import (
     make_plan,
     shardable_band_rows,
 )
-from repro.engine.scheduler import MicroBatchScheduler, QueueFullError
-from repro.engine.server import SRFuture, SRServer
+from repro.engine.scheduler import (
+    DeadlineExceededError,
+    MicroBatchScheduler,
+    QueueFullError,
+    RequestShedError,
+)
+from repro.engine.server import (
+    DEGRADE_LADDER,
+    DegradePolicy,
+    SRFuture,
+    SRServer,
+)
 from repro.engine.session import (
     AUTOTUNE_MODES,
     PlanCache,
@@ -98,6 +108,10 @@ __all__ = [
     "SRFuture",
     "MicroBatchScheduler",
     "QueueFullError",
+    "DeadlineExceededError",
+    "RequestShedError",
+    "DegradePolicy",
+    "DEGRADE_LADDER",
     "SRSession",
     "PlanCache",
     "bucket_batch",

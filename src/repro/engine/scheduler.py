@@ -8,7 +8,20 @@ bookkeeping half of that (no jax, no compute — execution lives in
 
 * **Admission.**  Requests enter per-key FIFO queues; the server enforces
   its ``max_inflight_frames`` bound at admission and raises
-  :class:`QueueFullError` (or blocks and drains) when the queue is full.
+  :class:`QueueFullError` (or blocks and drains, or SHEDS queued work —
+  see below) when the queue is full.
+* **Deadlines.**  A request may carry an absolute monotonic ``deadline``;
+  :meth:`MicroBatchScheduler.expire_due` removes queued, never-dispatched
+  requests whose deadline has passed (the server fails their futures with
+  ``DeadlineExceededError`` before they ever compile or dispatch).  A
+  partially-served request is past recall — its in-flight frames complete
+  regardless, exactly like :meth:`MicroBatchScheduler.drop`.
+* **Load shedding.**  Under ``admission="shed"`` the server asks
+  :meth:`MicroBatchScheduler.shed_victims` to evict the *lowest-priority,
+  latest-deadline* queued work (never the newcomer, and never anything
+  already dispatched) to make room; victims' futures fail with
+  ``RequestShedError``.  If nothing strictly less urgent than the
+  newcomer can free enough frames, the newcomer itself is rejected.
 * **Coalescing.**  The key is ``(model, plan, dtype-name)`` — exactly the
   session's compile-cache key plus the model name — because frames that
   share a key are served by the SAME compiled executor, so frames from
@@ -42,6 +55,8 @@ from typing import Deque, Dict, List, Optional
 __all__ = [
     "MicroBatchScheduler",
     "QueueFullError",
+    "DeadlineExceededError",
+    "RequestShedError",
     "SchedRequest",
     "Ticket",
     "Dispatch",
@@ -53,7 +68,23 @@ RECENT_DISPATCH_LOG = 256
 
 class QueueFullError(RuntimeError):
     """Admission rejected: the server's ``max_inflight_frames`` bound is
-    full and the admission policy is ``"reject"``."""
+    full and the admission policy is ``"reject"`` (or ``"shed"`` with the
+    newcomer itself the least-urgent work queued)."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """The request's deadline passed while it was still queued — it was
+    cancelled before compiling or dispatching.  A ``TimeoutError``
+    subclass, but distinct from the plain ``TimeoutError`` that
+    ``SRFuture.result(timeout=)`` raises when only the *wait* expires
+    (the request itself stays queued and may still complete)."""
+
+
+class RequestShedError(QueueFullError):
+    """This queued request was EVICTED under ``admission="shed"``: the
+    bound was full and a newer, more urgent request claimed its frames.
+    Subclasses :class:`QueueFullError` so callers handling queue-full
+    rejection handle shedding too."""
 
 
 @dataclasses.dataclass
@@ -76,6 +107,12 @@ class SchedRequest:
     future: object  # SRFuture
     ndim: int  # caller's original rank (3 | 4 | 5)
     lead: Optional[tuple]  # (B, T) when ndim == 5
+    # absolute time.monotonic() seconds; None = no deadline.  Checked by
+    # expire_due while the request is still fully queued.
+    deadline: Optional[float] = None
+    # admission timestamp (time.monotonic()) — end-to-end latency anchor
+    # for the server's degrade policy
+    admitted_at: float = 0.0
     served: int = 0
     completed: int = 0
     pieces: List = dataclasses.field(default_factory=list)
@@ -141,6 +178,8 @@ class MicroBatchScheduler:
         self.frames_dispatched = 0
         self.slots_dispatched = 0
         self.rejected = 0
+        self.expired = 0  # queued requests cancelled past their deadline
+        self.shed = 0  # queued requests evicted under admission="shed"
         # replica index -> dispatches routed there (mesh serving only;
         # stays empty on single-device sessions)
         self.replica_dispatches: Dict[int, int] = {}
@@ -198,6 +237,80 @@ class MicroBatchScheduler:
             del self._queues[req.key]
             self._carry.pop(req.key, None)
 
+    def expire_due(self, now: float) -> List[SchedRequest]:
+        """Remove queued, never-dispatched requests whose deadline passed.
+
+        Returns them (the server fails each future with
+        ``DeadlineExceededError``).  A partially-served request is kept:
+        its dispatched frames are in flight and its tail must ride the
+        pinned carry bucket — cancelling half a clip would hand back a
+        torn result.  Expiry is therefore all-or-nothing, decided before
+        the first frame dispatches.
+        """
+        if not self._queues:
+            return []
+        expired: List[SchedRequest] = []
+        for key in list(self._queues):
+            q = self._queues[key]
+            due = [r for r in q
+                   if r.deadline is not None and r.served == 0
+                   and r.deadline <= now]
+            for r in due:
+                q.remove(r)
+                self.pending_frames -= r.n
+                expired.append(r)
+            if not q:
+                del self._queues[key]
+                self._carry.pop(key, None)
+        self.expired += len(expired)
+        return expired
+
+    def shed_victims(self, need: int, *, priority: int,
+                     deadline: Optional[float]) -> Optional[List[SchedRequest]]:
+        """Pick queued work to evict so ``need`` frames fit, or ``None``.
+
+        Only requests ranked strictly BELOW the newcomer are candidates:
+        lower priority, or equal priority with a later deadline (no
+        deadline sorts latest — unconstrained work is the first to go).
+        Partially-served requests are immune (their frames are in
+        flight).  Victims are taken worst-first — lowest priority, then
+        latest deadline, then newest — and removed from their queues;
+        the caller fails their futures with ``RequestShedError``.
+
+        Returns ``None`` without evicting anything when the candidates
+        cannot free ``need`` frames: the newcomer is then the least
+        urgent work in the building and should be rejected instead.
+        """
+        inf = float("inf")
+        new_dl = inf if deadline is None else deadline
+
+        def rank(r: SchedRequest) -> tuple:
+            r_dl = inf if r.deadline is None else r.deadline
+            return (r.priority, -r_dl, -r.seq)  # ascending = worst first
+
+        cands = [
+            r for q in self._queues.values() for r in q
+            if r.served == 0 and (
+                r.priority < priority
+                or (r.priority == priority
+                    and (inf if r.deadline is None else r.deadline) > new_dl)
+            )
+        ]
+        cands.sort(key=rank)
+        victims: List[SchedRequest] = []
+        freed = 0
+        for r in cands:
+            if freed >= need:
+                break
+            victims.append(r)
+            freed += r.n
+        if freed < need:
+            return None
+        for r in victims:
+            self.drop(r)
+        self.shed += len(victims)
+        return victims
+
     # ------------------------------------------------------------------
     # Dispatch formation
     # ------------------------------------------------------------------
@@ -214,10 +327,13 @@ class MicroBatchScheduler:
                 best_key, best_rank = key, rank
         return best_key
 
-    def next_dispatch(self, ready) -> Optional[Dispatch]:
+    def next_dispatch(self, ready, bucket_fn=None) -> Optional[Dispatch]:
         """Form the next bucket-sized dispatch, or ``None`` if nothing is
         pending for a ready session.  Consumes the taken frames from the
-        queues and updates the coalescing counters."""
+        queues and updates the coalescing counters.  ``bucket_fn``, when
+        given, post-processes a freshly derived bucket size (the server's
+        degrade policy shrinks buckets under pressure); a carry-pinned
+        bucket is NEVER resized — a clip mid-flight keeps its program."""
         key = self._select_key(ready)
         if key is None:
             return None
@@ -230,6 +346,8 @@ class MicroBatchScheduler:
         bucket = self._carry.get(key)
         if bucket is None:
             bucket = session._bucket_for(self.pending_for(key))
+            if bucket_fn is not None:
+                bucket = max(1, int(bucket_fn(bucket)))
         tickets: List[Ticket] = []
         slot = 0
         while q and slot < bucket:
@@ -292,5 +410,7 @@ class MicroBatchScheduler:
             "padded_frames": slots - self.frames_dispatched,
             "mean_fill_ratio": self.frames_dispatched / slots if slots else 0.0,
             "rejected": self.rejected,
+            "expired": self.expired,
+            "shed": self.shed,
             "replica_dispatches": dict(self.replica_dispatches),
         }

@@ -20,9 +20,26 @@ datapath's work queue:
   fed) and HR frames are yielded in order; concurrent streams share
   dispatches.
 * ``max_inflight_frames`` bounds the queue (pending + dispatched frames);
-  at the bound, ``admission="block"`` drains the queue to make space and
+  at the bound, ``admission="block"`` drains the queue to make space,
   ``admission="reject"`` raises
-  :class:`~repro.engine.scheduler.QueueFullError`.
+  :class:`~repro.engine.scheduler.QueueFullError`, and
+  ``admission="shed"`` evicts the lowest-priority, latest-deadline queued
+  work (never the newcomer) — victims fail with
+  :class:`~repro.engine.scheduler.RequestShedError`.
+* ``submit(frames, deadline=..., timeout=...)`` attaches a per-request
+  deadline: a request still fully queued when it passes is cancelled with
+  :class:`~repro.engine.scheduler.DeadlineExceededError` before it ever
+  compiles or dispatches — its coalesced neighbors are untouched.
+* :class:`DegradePolicy` is the overload pressure valve: it watches a
+  rolling p99 of end-to-end request latency (the EMA mean/var core shared
+  with ``runtime.resilience.StragglerDetector``) and on sustained SLO
+  breach steps down a documented ladder — bf16 dispatch dtype, halved
+  ``stream()`` lookahead, halved buckets — stepping back up on recovery;
+  every transition is logged in ``stats()``.
+* A ``runtime.resilience.FailureInjector`` passed as ``injector=``
+  intercepts every launch (fail the k-th dispatch, delay a replica,
+  poison a model): injected faults flow through the normal
+  dispatch-failure isolation, so only the affected requests fail.
 
 Execution is the PIPELINED drain loop that previously lived inside
 ``SRSession``: each dispatch is assembled (host frames through the
@@ -55,16 +72,163 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.scheduler import (
+    DeadlineExceededError,
     Dispatch,
     MicroBatchScheduler,
     QueueFullError,
+    RequestShedError,
     SchedRequest,
 )
 from repro.engine.session import SRSession
+from repro.runtime.resilience import EMAMeanVar
 
-__all__ = ["SRServer", "SRFuture", "QueueFullError"]
+__all__ = [
+    "SRServer",
+    "SRFuture",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "RequestShedError",
+    "DegradePolicy",
+    "DEGRADE_LADDER",
+]
 
-ADMISSION_POLICIES = ("block", "reject")
+ADMISSION_POLICIES = ("block", "reject", "shed")
+
+# The degradation ladder, mildest first; level k applies steps 1..k.
+DEGRADE_LADDER = ("full", "bf16", "half_lookahead", "half_buckets")
+
+
+class DegradePolicy:
+    """Degrade-under-pressure controller for :class:`SRServer`.
+
+    Watches a rolling p99 estimate of END-TO-END request latency
+    (admission to future resolution, milliseconds): an
+    :class:`~repro.runtime.resilience.EMAMeanVar` — the same moving
+    mean/variance core ``StragglerDetector`` uses for training-step
+    latencies — approximates p99 as ``mean + 2.326 sigma``.  O(1) per
+    observation, no reservoir, and monotone in both load and jitter,
+    which is what a pressure signal needs.
+
+    The ladder (:data:`DEGRADE_LADDER`), mildest first; level k applies
+    every step up to k:
+
+    1. ``bf16`` — fp32 requests dispatch in bf16 (half the slab traffic
+       per frame; the paper's own on-chip compute precision).
+    2. ``half_lookahead`` — ``stream()`` halves its lookahead window
+       (fewer speculative frames queued per live stream).
+    3. ``half_buckets`` — freshly derived dispatch buckets are halved
+       (lower per-dispatch latency at some throughput cost; carry-pinned
+       buckets are never resized mid-clip).
+
+    Hysteresis: stepping DOWN takes ``breach_steps`` consecutive
+    observations with the p99 estimate over ``slo_p99_ms``; stepping UP
+    takes ``recover_steps`` consecutive observations at or under
+    ``recover_fraction * slo_p99_ms``.  One outlier cannot flap the
+    ladder.  Every transition is recorded (``transitions``, surfaced by
+    ``SRServer.stats()``).
+
+    Thread-safety: the server calls :meth:`observe` and reads the level
+    under its own lock; the policy object itself keeps no lock.
+    """
+
+    #: z for the normal-approximation p99 (Phi(2.326) ~ 0.99)
+    P99_Z = 2.326
+
+    def __init__(self, slo_p99_ms: float, *, alpha: float = 0.1,
+                 breach_steps: int = 3, recover_steps: int = 8,
+                 recover_fraction: float = 0.5):
+        if slo_p99_ms <= 0:
+            raise ValueError(f"slo_p99_ms={slo_p99_ms} must be > 0")
+        if breach_steps < 1 or recover_steps < 1:
+            raise ValueError("breach_steps and recover_steps must be >= 1")
+        if not 0 < recover_fraction <= 1:
+            raise ValueError(
+                f"recover_fraction={recover_fraction} must be in (0, 1]"
+            )
+        self.slo_p99_ms = float(slo_p99_ms)
+        self.breach_steps = int(breach_steps)
+        self.recover_steps = int(recover_steps)
+        self.recover_fraction = float(recover_fraction)
+        self._ema = EMAMeanVar(alpha)
+        self.level = 0
+        self.observations = 0
+        self.degraded_requests = 0  # requests admitted at level > 0
+        self.transitions: list = []
+        self._breach = 0
+        self._recover = 0
+
+    @property
+    def p99_ms(self) -> float:
+        """The rolling p99 estimate (0.0 until the first observation)."""
+        return self._ema.upper(self.P99_Z)
+
+    def observe(self, latency_ms: float) -> Optional[dict]:
+        """Fold one completed request's end-to-end latency; returns the
+        transition record if this observation moved the ladder."""
+        self.observations += 1
+        self._ema.fold(latency_ms)
+        p99 = self.p99_ms
+        if p99 > self.slo_p99_ms:
+            self._breach += 1
+            self._recover = 0
+            if (self._breach >= self.breach_steps
+                    and self.level < len(DEGRADE_LADDER) - 1):
+                return self._transition(self.level + 1, p99, "slo_breach")
+        elif p99 <= self.recover_fraction * self.slo_p99_ms:
+            self._recover += 1
+            self._breach = 0
+            if self._recover >= self.recover_steps and self.level > 0:
+                return self._transition(self.level - 1, p99, "recovered")
+        else:
+            # between the recovery band and the SLO: steady state, reset
+            # both streaks — neither direction is earning a transition
+            self._breach = 0
+            self._recover = 0
+        return None
+
+    def _transition(self, to: int, p99: float, reason: str) -> dict:
+        t = {
+            "from": self.level,
+            "to": to,
+            "from_step": DEGRADE_LADDER[self.level],
+            "to_step": DEGRADE_LADDER[to],
+            "p99_ms": round(p99, 3),
+            "slo_p99_ms": self.slo_p99_ms,
+            "reason": reason,
+            "observation": self.observations,
+        }
+        self.level = to
+        self._breach = 0
+        self._recover = 0
+        self.transitions.append(t)
+        return t
+
+    # --- the knobs the server consults, one per ladder step -----------
+    def serve_dtype(self, dtype: np.dtype) -> np.dtype:
+        """Dispatch dtype at the current level (level >= 1: fp32 -> bf16)."""
+        if self.level >= 1 and np.dtype(dtype) == np.float32:
+            return np.dtype(jnp.bfloat16)
+        return np.dtype(dtype)
+
+    def lookahead(self, base: int) -> int:
+        """Stream lookahead at the current level (level >= 2: halved)."""
+        return max(1, base // 2) if self.level >= 2 else base
+
+    def bucket_cap(self, bucket: int) -> int:
+        """Dispatch bucket at the current level (level >= 3: halved)."""
+        return max(1, bucket // 2) if self.level >= 3 else bucket
+
+    def stats(self) -> dict:
+        return {
+            "level": self.level,
+            "step": DEGRADE_LADDER[self.level],
+            "ladder": list(DEGRADE_LADDER),
+            "slo_p99_ms": self.slo_p99_ms,
+            "p99_ms": round(self.p99_ms, 3),
+            "observations": self.observations,
+            "degraded_requests": self.degraded_requests,
+            "transitions": list(self.transitions),
+        }
 
 
 class SRFuture:
@@ -90,19 +254,28 @@ class SRFuture:
         return self._done
 
     def _wait_done(self, timeout: Optional[float]) -> None:
-        """Drive the drain, then wait (bounded) for completion.
+        """Drive the drain, then wait for completion — both bounded by one
+        monotonic deadline.
 
-        ``timeout`` bounds only the *wait* for another thread's drain to
-        finish the request — a drain this call performs itself runs to
-        completion.
+        ``timeout`` is WALL-CLOCK from this call: a drain this call
+        performs itself checks the deadline between steps (so a caller
+        driving the drain still gets a timely ``TimeoutError``), and the
+        wait loops on the condition until done or due — a single
+        ``cond.wait(timeout)`` could return early on a spurious wakeup
+        and then either under-wait or over-wait.
         """
+        deadline = None if timeout is None else time.monotonic() + timeout
         if not self._done:
-            self._server._drain_until(self)
+            self._server._drain_until(self, deadline=deadline)
         with self._cond:
-            if not self._done:
-                self._cond.wait(timeout)
-            if not self._done:
-                raise TimeoutError("request not complete within timeout")
+            while not self._done:
+                if deadline is None:
+                    self._cond.wait()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("request not complete within timeout")
+                self._cond.wait(remaining)
 
     def result(self, timeout: Optional[float] = None):
         """The request's HR output (blocking; drives the server's drain),
@@ -168,7 +341,13 @@ class SRServer:
     target when ``submit`` is called without ``model=`` (defaults to the
     first session).  ``max_inflight_frames`` bounds pending + dispatched
     frames; ``admission`` picks the full-queue behavior (``"block"`` drains
-    to make space, ``"reject"`` raises :class:`QueueFullError`).
+    to make space, ``"reject"`` raises :class:`QueueFullError`, ``"shed"``
+    evicts the lowest-priority latest-deadline queued work to make room —
+    or rejects the newcomer when it is itself the least urgent).
+    ``degrade`` installs a :class:`DegradePolicy`; ``injector`` a
+    :class:`~repro.runtime.resilience.FailureInjector` consulted before
+    every launch (tests/load harness only — injected faults fail exactly
+    the dispatch they target).
     """
 
     def __init__(
@@ -178,6 +357,8 @@ class SRServer:
         default_model: Optional[str] = None,
         max_inflight_frames: Optional[int] = None,
         admission: str = "block",
+        degrade: Optional[DegradePolicy] = None,
+        injector=None,
     ):
         if isinstance(sessions, SRSession):
             sessions = {sessions.model or "default": sessions}
@@ -200,6 +381,20 @@ class SRServer:
             raise ValueError(
                 f"admission {admission!r} not in {ADMISSION_POLICIES}"
             )
+        if admission == "shed" and max_inflight_frames is None:
+            raise ValueError(
+                'admission="shed" needs a max_inflight_frames bound — '
+                "an unbounded queue never sheds"
+            )
+        if degrade is not None and not isinstance(degrade, DegradePolicy):
+            raise ValueError(
+                f"degrade must be a DegradePolicy, got {type(degrade).__name__}"
+            )
+        if injector is not None and not hasattr(injector, "on_dispatch"):
+            raise ValueError(
+                "injector must expose on_dispatch(model=, replica=) — "
+                "see repro.runtime.resilience.FailureInjector"
+            )
         if default_model is None:
             default_model = next(iter(sessions))
         if default_model not in sessions:
@@ -211,6 +406,8 @@ class SRServer:
         self._default = default_model
         self.max_inflight_frames = max_inflight_frames
         self.admission = admission
+        self._degrade = degrade
+        self._injector = injector
         # hosted sessions route their own submit()/upscale() through THIS
         # server, so one lock + one scheduler govern all traffic into the
         # session; a SECOND front door over the same mutable session state
@@ -260,6 +457,8 @@ class SRServer:
         default_model: Optional[str] = None,
         max_inflight_frames: Optional[int] = None,
         admission: str = "block",
+        degrade: Optional[DegradePolicy] = None,
+        injector=None,
         seed: int = 0,
         autotune: Union[str, Mapping[str, str], None] = None,
         **session_kwargs,
@@ -296,6 +495,8 @@ class SRServer:
             default_model=default_model,
             max_inflight_frames=max_inflight_frames,
             admission=admission,
+            degrade=degrade,
+            injector=injector,
         )
 
     # ------------------------------------------------------------------
@@ -320,13 +521,19 @@ class SRServer:
         return stats
 
     def stats(self) -> dict:
-        """Scheduler counters plus each hosted session's serving stats."""
-        return {
+        """Scheduler counters, each hosted session's serving stats, and —
+        when a :class:`DegradePolicy` is installed — its level, rolling
+        p99 estimate and full transition log."""
+        out = {
             "scheduler": self.scheduler_stats(),
             "models": {
                 name: dict(s.stats()) for name, s in self._sessions.items()
             },
         }
+        if self._degrade is not None:
+            with self._lock:
+                out["degrade"] = self._degrade.stats()
+        return out
 
     # ------------------------------------------------------------------
     # Admission
@@ -339,15 +546,20 @@ class SRServer:
             )
         return name
 
-    def submit_for(self, session: SRSession, frames, *, priority: int = 0) -> SRFuture:
+    def submit_for(self, session: SRSession, frames, *, priority: int = 0,
+                   deadline: Optional[float] = None,
+                   timeout: Optional[float] = None) -> SRFuture:
         """Submit addressed by hosted session identity rather than name —
         what ``SRSession.submit`` calls on its hosting server."""
         for name, s in self._sessions.items():
             if s is session:
-                return self.submit(frames, model=name, priority=priority)
+                return self.submit(frames, model=name, priority=priority,
+                                   deadline=deadline, timeout=timeout)
         raise ValueError("session is not hosted by this server")
 
-    def submit(self, frames, *, model: Optional[str] = None, priority: int = 0) -> SRFuture:
+    def submit(self, frames, *, model: Optional[str] = None,
+               priority: int = 0, deadline: Optional[float] = None,
+               timeout: Optional[float] = None) -> SRFuture:
         """Queue a request; returns its :class:`SRFuture` immediately.
 
         ``frames`` is any rank ``upscale`` accepts (``(H, W, C)``,
@@ -359,19 +571,53 @@ class SRServer:
         the drain loop next turns over (``result()``/``flush()``/a
         concurrent waiter), coalescing whatever compatible requests are
         queued by then.
+
+        ``deadline`` (absolute ``time.monotonic()`` seconds) or
+        ``timeout`` (seconds from now; the two are exclusive) bounds how
+        long the request may sit QUEUED: when it passes before the first
+        frame dispatches, the future fails with
+        :class:`DeadlineExceededError` — checked at every admission and
+        drain turn, so an expired request never compiles or dispatches.
+        Once frames are in flight the request runs to completion (a torn
+        half-clip helps nobody); the deadline bounds queueing, not
+        compute.
         """
         if self._closed:
             raise RuntimeError("server is closed")
+        if deadline is not None and timeout is not None:
+            raise ValueError("pass deadline= or timeout=, not both")
+        if timeout is not None:
+            deadline = time.monotonic() + float(timeout)
         name = self._resolve_model(model)
         session = self._sessions[name]
         flat, ndim, lead = session.flatten_request(frames)
+        degraded = False
+        if self._degrade is not None:
+            # apply the ladder's dispatch dtype BEFORE key derivation, so
+            # a degraded request coalesces with (and compiles as) bf16
+            # traffic — the downcast happens here, on the host copy
+            wanted = self._degrade.serve_dtype(flat.dtype)
+            if wanted != flat.dtype:
+                flat = flat.astype(wanted)
+                degraded = True
         shape = tuple(int(x) for x in flat.shape[1:])
         n = int(flat.shape[0])
+        fut = SRFuture(self)
+        if deadline is not None and time.monotonic() >= deadline:
+            # dead on arrival: fail before plan derivation, let alone
+            # compilation — the caller's clock budget is already spent
+            with self._lock:
+                self._sched.expired += 1
+            fut._finish(exc=DeadlineExceededError(
+                "deadline exceeded on submit: the request's budget "
+                "elapsed before admission"
+            ))
+            fut._run_callbacks()
+            return fut
         # the request's frame count keys the tuning-DB lookup on a new
         # shape (bucket rounding policy is tuned per batch size)
         plan = session.plan_for(shape, batch_hint=n or None)
         dtype = session.serving_dtype(flat.dtype)
-        fut = SRFuture(self)
         if n == 0:
             out = jnp.zeros((0, *plan.hr_shape), session.output_dtype(plan, dtype))
             if ndim == 5:
@@ -391,9 +637,25 @@ class SRServer:
             future=fut,
             ndim=ndim,
             lead=lead,
+            deadline=deadline,
         )
         self._admit(req)
+        if degraded:
+            with self._lock:
+                self._degrade.degraded_requests += 1
         return fut
+
+    def _expire_locked(self, now: float) -> None:
+        """Cancel queued past-deadline requests (call holding the lock):
+        each fails with :class:`DeadlineExceededError` before compiling or
+        dispatching; callbacks run via ``_just_finished`` off-lock."""
+        for r in self._sched.expire_due(now):
+            r.failed = True
+            r.future._finish(exc=DeadlineExceededError(
+                f"deadline exceeded: {r.n} frames still queued when the "
+                "request's deadline passed (never dispatched)"
+            ))
+            self._just_finished.append(r.future)
 
     def _admit(self, req: SchedRequest) -> None:
         bound = self.max_inflight_frames
@@ -403,27 +665,82 @@ class SRServer:
                 f"max_inflight_frames={bound}"
             )
         while True:
+            err: Optional[BaseException] = None
+            admitted = False
+            done = False
             with self._lock:
+                # expire due work first: a stale queue must not block or
+                # shed live traffic a deadline already freed
+                self._expire_locked(time.monotonic())
                 queued = self._sched.pending_frames + self._inflight_frames
-                if bound is None or queued + req.n <= bound:
+                if (req.deadline is not None
+                        and time.monotonic() >= req.deadline):
+                    # the budget elapsed while blocked at admission — the
+                    # request expires unqueued, same contract as expiry
+                    self._sched.expired += 1
+                    req.failed = True
+                    req.future._finish(exc=DeadlineExceededError(
+                        "deadline exceeded during admission: the queue "
+                        "stayed full past the request's budget"
+                    ))
+                    self._just_finished.append(req.future)
+                    done = True
+                elif bound is None or queued + req.n <= bound:
                     req.seq = self._sched.next_seq()
+                    req.admitted_at = time.monotonic()
                     self._sched.add(req)
-                    return
-                if self.admission == "reject":
+                    admitted = True
+                elif self.admission == "reject":
                     self._sched.note_rejected()
-                    raise QueueFullError(
+                    err = QueueFullError(
                         f"queue full: {queued} frames in flight + {req.n} "
                         f"requested > max_inflight_frames={bound}"
                     )
-                # a full queue implies drainable work (checked under the
-                # SAME lock as the fullness read — another thread may have
-                # drained it by the time our step runs, which is fine)
-                if not (self._sched.has_pending() or self._inflight
-                        or self._completing):
-                    raise RuntimeError(
-                        "queue full but no work to drain — inconsistent "
-                        "scheduler state"
+                elif self.admission == "shed":
+                    victims = self._sched.shed_victims(
+                        queued + req.n - bound,
+                        priority=req.priority, deadline=req.deadline,
                     )
+                    if victims is None:
+                        # nothing queued ranks below the newcomer — IT is
+                        # the least-urgent work, so it takes the rejection
+                        self._sched.note_rejected()
+                        err = QueueFullError(
+                            f"queue full: {queued} frames in flight + "
+                            f"{req.n} requested > max_inflight_frames="
+                            f"{bound}, and no queued work ranks below the "
+                            "new request"
+                        )
+                    else:
+                        for v in victims:
+                            v.failed = True
+                            v.future._finish(exc=RequestShedError(
+                                f"shed: {v.n} queued frames (priority "
+                                f"{v.priority}) evicted for a priority-"
+                                f"{req.priority} request at a full queue"
+                            ))
+                            self._just_finished.append(v.future)
+                        req.seq = self._sched.next_seq()
+                        req.admitted_at = time.monotonic()
+                        self._sched.add(req)
+                        admitted = True
+                else:
+                    # a full queue implies drainable work (checked under
+                    # the SAME lock as the fullness read — another thread
+                    # may have drained it by the time our step runs,
+                    # which is fine)
+                    if not (self._sched.has_pending() or self._inflight
+                            or self._completing):
+                        raise RuntimeError(
+                            "queue full but no work to drain — "
+                            "inconsistent scheduler state"
+                        )
+                finished = self._take_finished()
+            self._run_finished(finished)
+            if err is not None:
+                raise err
+            if admitted or done:
+                return
             # block policy: make space by draining the queue (outside the
             # lock — _step synchronizes itself), then re-check admission
             self._step()
@@ -437,8 +754,14 @@ class SRServer:
         while self._step():
             pass
 
-    def _drain_until(self, fut: SRFuture) -> None:
+    def _drain_until(self, fut: SRFuture,
+                     deadline: Optional[float] = None) -> None:
+        """Drive the drain until ``fut`` resolves — or until ``deadline``
+        (absolute monotonic) passes, in which case this returns with the
+        request still queued/in flight and the caller's wait raises."""
         while not fut.done():
+            if deadline is not None and time.monotonic() >= deadline:
+                return
             if not self._step():
                 if fut.done():
                     # a concurrent thread finalized the future between our
@@ -470,25 +793,33 @@ class SRServer:
         completion frees depth slack.)
         """
         inf = None
+        progress = True
         with self._cv:
-            d = self._sched.next_dispatch(self._session_ready)
+            # cancel past-deadline queued work BEFORE forming a dispatch:
+            # an expired request must never reach compilation, and its
+            # frames must not inflate the bucket choice
+            self._expire_locked(time.monotonic())
+            bucket_fn = (self._degrade.bucket_cap
+                         if self._degrade is not None else None)
+            d = self._sched.next_dispatch(self._session_ready, bucket_fn)
             if d is not None:
                 self._launch(d)  # a launch FAILURE finishes futures
-                finished = self._take_finished()
             elif self._inflight:
                 inf = self._inflight.popleft()
                 self._completing += 1
-                finished = []
             elif self._completing:
                 # another thread is waiting on a completion — progress is
                 # theirs to make; sleep until its finalize wakes us
                 self._cv.wait()
-                return True
             else:
-                return False
+                # no dispatch, nothing in flight: this turn made progress
+                # only if expiry just finished futures
+                progress = bool(self._just_finished)
+            finished = self._take_finished()
         if inf is None:
             self._run_finished(finished)
-            return True
+            return progress
+        self._run_finished(finished)
         error: Optional[BaseException] = None
         try:
             jax.block_until_ready(inf.hr)  # off-lock device wait
@@ -519,6 +850,13 @@ class SRServer:
             # executor resolution may compile — on a dummy, before the
             # timed dispatch starts, exactly like the pre-server path
             entry, _ = session.executor_for(d.plan, d.bucket, np.dtype(d.key[2]))
+            if self._injector is not None:
+                # fault-injection point (tests/load harness): a raise here
+                # flows through _fail_dispatch below — exactly this
+                # dispatch's requests fail, everything else keeps serving
+                self._injector.on_dispatch(
+                    model=d.key[0], replica=getattr(entry, "replica", None)
+                )
             slab, used_staging = self._assemble(d, entry.donates)
             t0 = time.perf_counter()
             hr = entry.fn(slab)  # async dispatch: returns immediately
@@ -638,6 +976,11 @@ class SRServer:
             out = out.reshape(*req.lead, *req.plan.hr_shape)
         req.future._finish(result=out)
         self._just_finished.append(req.future)
+        if self._degrade is not None and req.admitted_at:
+            # end-to-end latency (admission -> resolution) is the pressure
+            # signal: unlike per-dispatch latency it sees queue delay,
+            # which is what overload actually inflates
+            self._degrade.observe((time.monotonic() - req.admitted_at) * 1e3)
 
     def _fail_dispatch(self, d: Dispatch, exc: BaseException) -> None:
         """A dispatch failed (build, launch or device error): fail every
@@ -664,15 +1007,20 @@ class SRServer:
         coalesces its own lookahead window into full buckets, and
         concurrent streams share dispatches with each other.  Waiting
         happens off the event loop (``asyncio.to_thread``), so multiple
-        streams interleave.
+        streams interleave.  Under an active :class:`DegradePolicy` at
+        level >= 2 the window is halved — re-read each turn, so a
+        mid-stream transition takes effect on the next frame.
         """
         import asyncio
 
+        base = max(1, int(lookahead))
         pending: Deque[SRFuture] = deque()
         it = iter(frames)
         exhausted = False
         while pending or not exhausted:
-            while not exhausted and len(pending) < max(1, int(lookahead)):
+            window = (self._degrade.lookahead(base)
+                      if self._degrade is not None else base)
+            while not exhausted and len(pending) < window:
                 try:
                     frame = next(it)
                 except StopIteration:
@@ -690,9 +1038,15 @@ class SRServer:
     # Lifecycle
     # ------------------------------------------------------------------
     def close(self) -> None:
-        """Drain outstanding work and refuse further submits."""
+        """Drain outstanding work, refuse further submits, and release
+        the hosted sessions so a successor server may host them (their
+        compile caches carry over; the load harness leans on this to
+        reuse warm sessions across server configurations)."""
         self.flush()
         self._closed = True
+        for s in self._sessions.values():
+            if s._server is self:
+                s._server = None
 
     def __enter__(self) -> "SRServer":
         return self

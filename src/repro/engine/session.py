@@ -886,7 +886,9 @@ class SRSession:
             )
         return flat, arr.ndim, lead
 
-    def submit(self, frames, *, priority: int = 0):
+    def submit(self, frames, *, priority: int = 0,
+               deadline: Optional[float] = None,
+               timeout: Optional[float] = None):
         """Queue a request on the session's embedded server; returns an
         :class:`~repro.engine.server.SRFuture` immediately.
 
@@ -896,7 +898,9 @@ class SRSession:
         If an :class:`~repro.engine.server.SRServer` hosts this session,
         the request goes through THAT server (one scheduler + one lock
         govern all traffic into the session); otherwise an embedded
-        single-model server is created on first use.
+        single-model server is created on first use.  ``deadline``
+        (absolute monotonic seconds) / ``timeout`` (relative) bound the
+        request's QUEUED lifetime — see ``SRServer.submit``.
         """
         if self._server is None:
             from repro.engine.server import SRServer  # lazy: avoids a cycle
@@ -904,7 +908,8 @@ class SRSession:
             # (SRServer.__init__ also registers itself on the session —
             # the assignment is the same object, stated explicitly)
             self._server = SRServer({self.model or "session": self})
-        return self._server.submit_for(self, frames, priority=priority)
+        return self._server.submit_for(self, frames, priority=priority,
+                                       deadline=deadline, timeout=timeout)
 
     def upscale(self, frames) -> jax.Array:
         """Super-resolve frames of any supported rank (blocking).

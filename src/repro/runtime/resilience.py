@@ -9,7 +9,15 @@ Designed for 1000+ node posture, exercised here on fake device meshes:
 * **Straggler detection** — :class:`StragglerDetector` keeps an EMA of
   step times and flags z-score outliers; the loop records them and (policy)
   can trigger a re-mesh.  On real fleets this signal comes per-host; the
-  detection logic is host-count agnostic.
+  detection logic is host-count agnostic.  Its EMA mean/variance core is
+  :class:`EMAMeanVar`, shared with the serving stack's
+  ``engine.server.DegradePolicy`` (rolling p99 estimation).
+* **Fault injection** — :class:`FailureInjector` covers both the training
+  restart loop (``fail_at_steps``/``maybe_fail``) and the serving path:
+  ``SRServer(..., injector=...)`` calls :meth:`FailureInjector.on_dispatch`
+  before every launch, so tests and the load harness can fail the k-th
+  dispatch, delay a replica, or poison one hosted model and prove the
+  server fails only the affected requests.
 * **Elastic re-mesh** — :func:`elastic_remesh` moves the training state
   onto a smaller/larger mesh by re-resolving every leaf's logical sharding
   against the new mesh and ``device_put``-ing.  Tested 8 -> 4 devices.
@@ -26,8 +34,65 @@ import jax
 from repro.distributed import partitioning as pt
 from repro.runtime import checkpoint as ckpt_lib
 
-__all__ = ["StragglerDetector", "FailureInjector", "resilient_train_loop",
-           "elastic_remesh"]
+__all__ = ["EMAMeanVar", "StragglerDetector", "FailureInjector",
+           "InjectedFailure", "resilient_train_loop", "elastic_remesh"]
+
+
+class EMAMeanVar:
+    """Exponential moving mean/variance of a latency stream.
+
+    The shared core under :class:`StragglerDetector` (per-step training
+    latency, z-score outliers) and ``engine.server.DegradePolicy``
+    (per-request serving latency, rolling p99 estimate).  The variance is
+    SEEDED from the first nonzero delta: the plain recurrence leaves
+    ``var == 0`` after a constant-latency prefix, which silently disarms
+    any ``var > 0`` z-score gate downstream for one fold longer than its
+    warmup promises.
+    """
+
+    def __init__(self, alpha: float = 0.1):
+        self.alpha = alpha
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+
+    def fold(self, x: float) -> None:
+        """Fold one observation into the moving statistics."""
+        self.n += 1
+        if self.mean is None:
+            self.mean = float(x)
+            return
+        delta = x - self.mean
+        if self.var == 0.0 and delta != 0.0:
+            self.var = delta * delta
+        else:
+            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        self.mean += self.alpha * delta
+
+    @property
+    def std(self) -> float:
+        return self.var ** 0.5
+
+    def zscore(self, x: float) -> float:
+        """How many moving standard deviations ``x`` sits from the mean.
+        With zero variance (a perfectly constant history) any deviation is
+        infinitely surprising: returns ``±inf`` rather than 0, so a spike
+        after constant warmup is still flagged."""
+        if self.mean is None:
+            return 0.0
+        delta = x - self.mean
+        if self.var > 0:
+            return delta / self.var ** 0.5
+        if delta == 0:
+            return 0.0
+        return float("inf") if delta > 0 else float("-inf")
+
+    def upper(self, z: float) -> float:
+        """``mean + z * std`` — the normal-approximation upper quantile
+        (z=2.326 ~ p99) the serving degrade policy tracks."""
+        if self.mean is None:
+            return 0.0
+        return self.mean + z * self.std
 
 
 class StragglerDetector:
@@ -37,41 +102,106 @@ class StragglerDetector:
                  warmup: int = 5):
         self.alpha, self.z = alpha, z_threshold
         self.warmup = warmup
-        self.mean: Optional[float] = None
-        self.var: float = 0.0
+        self._ema = EMAMeanVar(alpha)
         self.n = 0
         self.flagged: list = []
 
+    # the EMA state reads like before — .mean/.var are the moving stats
+    # (outliers are never folded, so they track the clean baseline)
+    @property
+    def mean(self) -> Optional[float]:
+        return self._ema.mean
+
+    @property
+    def var(self) -> float:
+        return self._ema.var
+
     def update(self, step: int, seconds: float) -> bool:
         self.n += 1
-        if self.mean is None:
-            self.mean = seconds
+        if self._ema.mean is None:
+            self._ema.fold(seconds)
             return False
-        delta = seconds - self.mean
         is_straggler = False
-        if self.n > self.warmup and self.var > 0:
-            zscore = delta / (self.var ** 0.5)
+        if self.n > self.warmup:
+            zscore = self._ema.zscore(seconds)
             if zscore > self.z:
                 is_straggler = True
                 self.flagged.append((step, seconds, zscore))
         # only fold non-outliers into the stats (outliers would mask repeats)
         if not is_straggler:
-            self.mean += self.alpha * delta
-            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+            self._ema.fold(seconds)
         return is_straggler
 
 
-class FailureInjector:
-    """Deterministic failure injection for restart tests."""
+class InjectedFailure(RuntimeError):
+    """Raised by :class:`FailureInjector` at a configured injection point
+    — distinguishable from organic failures in tests and harness output."""
 
-    def __init__(self, fail_at_steps=()):
+
+class FailureInjector:
+    """Deterministic failure injection for restart AND serving tests.
+
+    Training path (``resilient_train_loop``): ``fail_at_steps`` + a
+    ``maybe_fail(step)`` call at the top of each step.
+
+    Serving path: pass the injector to ``SRServer(..., injector=...)``;
+    the server calls :meth:`on_dispatch` before every launch, after
+    executor/replica resolution, so the injection flows through the
+    server's normal dispatch-failure isolation:
+
+    * ``fail_dispatches`` — zero-based global dispatch indices that raise
+      :class:`InjectedFailure` (the k-th dispatch fails; only that
+      dispatch's requests may fail, the server must keep serving).
+    * ``delay_dispatches`` — ``{index: seconds}``: stall those launches (a
+      transient straggler; the requests still complete).
+    * ``poison_models`` — model names whose EVERY dispatch fails (a bad
+      weight load; other hosted models must keep serving).
+    * ``delay_replicas`` — ``{replica_index: seconds}``: stall every
+      dispatch routed to one mesh replica (a straggler device).
+    """
+
+    def __init__(self, fail_at_steps=(), *, fail_dispatches=(),
+                 delay_dispatches=None, poison_models=(),
+                 delay_replicas=None):
         self.fail_at = set(fail_at_steps)
         self.fired = set()
+        self.fail_dispatches = set(fail_dispatches)
+        self.delay_dispatches = dict(delay_dispatches or {})
+        self.poison_models = set(poison_models)
+        self.delay_replicas = dict(delay_replicas or {})
+        self.dispatch_index = 0  # dispatches seen via on_dispatch
+        self.injected_failures = 0
+        self.injected_delays = 0
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
-            raise RuntimeError(f"injected failure at step {step}")
+            raise InjectedFailure(f"injected failure at step {step}")
+
+    def on_dispatch(self, *, model: Optional[str] = None,
+                    replica: Optional[int] = None) -> None:
+        """Serving-path injection point: called once per dispatch launch."""
+        k = self.dispatch_index
+        self.dispatch_index += 1
+        delay = self.delay_dispatches.get(k, 0.0)
+        if replica is not None:
+            delay = max(delay, self.delay_replicas.get(replica, 0.0))
+        if delay > 0:
+            self.injected_delays += 1
+            time.sleep(delay)
+        if model is not None and model in self.poison_models:
+            self.injected_failures += 1
+            raise InjectedFailure(f"injected poison: model {model!r}")
+        if k in self.fail_dispatches:
+            self.injected_failures += 1
+            raise InjectedFailure(f"injected failure at dispatch {k}")
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "dispatches_seen": self.dispatch_index,
+            "injected_failures": self.injected_failures,
+            "injected_delays": self.injected_delays,
+        }
 
 
 def resilient_train_loop(
@@ -102,12 +232,13 @@ def resilient_train_loop(
     step = start
     while step < total_steps:
         try:
-            t0 = time.time()
+            # monotonic: step-latency deltas must not jump with NTP slews
+            t0 = time.monotonic()
             if injector is not None:
                 injector.maybe_fail(step)
             state, metrics = train_step(state, batch_fn(step))
             jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
-            detector.update(step, time.time() - t0)
+            detector.update(step, time.monotonic() - t0)
             if on_metrics is not None:
                 on_metrics(step, metrics)
             if checkpoint_every and (step + 1) % checkpoint_every == 0:

@@ -1,0 +1,528 @@
+"""Production traffic hardening: per-request deadlines and cancellation,
+admission="shed" load-shedding, degrade-under-pressure (DegradePolicy),
+fault injection through the server's launch path, and concurrent
+admission="reject" behavior.  All fast tier (tiny tilted shapes).
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.engine.scheduler import (
+    DeadlineExceededError,
+    MicroBatchScheduler,
+    QueueFullError,
+    RequestShedError,
+    SchedRequest,
+)
+from repro.engine.server import DEGRADE_LADDER, DegradePolicy, SRFuture, SRServer
+from repro.models.abpn import ABPNConfig, init_abpn
+from repro.runtime.resilience import FailureInjector, InjectedFailure
+
+CFG = ABPNConfig()
+LAYERS = init_abpn(jax.random.PRNGKey(2), CFG)
+LR = (12, 16, 3)
+CLIP = jax.random.uniform(jax.random.PRNGKey(21), (8, *LR))
+ORACLE = None  # filled lazily (module import must stay cheap)
+
+
+def oracle(frames):
+    global ORACLE
+    if ORACLE is None:
+        plan = engine.make_plan(LAYERS, LR, band_rows=12, backend="tilted")
+        ORACLE = np.asarray(engine.run(plan, LAYERS, CLIP))
+    n = frames.shape[0]
+    for i in range(CLIP.shape[0] - n + 1):
+        if np.array_equal(np.asarray(frames), np.asarray(CLIP[i:i + n])):
+            return ORACLE[i:i + n]
+    raise AssertionError("frames are not a contiguous CLIP slice")
+
+
+def make_session(**kw):
+    kw.setdefault("backend", "tilted")
+    return engine.SRSession(LAYERS, **kw)
+
+
+def make_server(*, session_kw=None, **server_kw):
+    session = make_session(**(session_kw or {}))
+    return SRServer({"abpn": session}, **server_kw), session
+
+
+def sched_req(n, *, seq=0, priority=0, deadline=None, served=0):
+    """A scheduler-only request (no session/plan/future needed) for unit
+    tests of expiry and shed selection."""
+    r = SchedRequest(
+        seq=seq, key=("m", "plan", "float32"), session=None, plan=None,
+        flat=None, n=n, priority=priority, future=None, ndim=4, lead=None,
+        deadline=deadline,
+    )
+    r.served = served
+    return r
+
+
+# ----------------------------------------------------------------------
+# Deadlines: scheduler-level expiry semantics
+# ----------------------------------------------------------------------
+def test_expire_due_removes_only_queued_due_requests():
+    s = MicroBatchScheduler()
+    fresh = sched_req(2, seq=0, deadline=100.0)
+    due = sched_req(2, seq=1, deadline=5.0)
+    no_deadline = sched_req(2, seq=2)
+    for r in (fresh, due, no_deadline):
+        s.add(r)
+    expired = s.expire_due(now=10.0)
+    assert expired == [due]
+    assert s.pending_frames == 4
+    assert s.stats()["expired"] == 1
+    # idempotent: nothing else is due
+    assert s.expire_due(now=10.0) == []
+
+
+def test_expire_due_spares_partially_served_requests():
+    """Frames already handed to a dispatch are past recall: a half-served
+    clip completes even if its deadline passes mid-flight."""
+    s = MicroBatchScheduler()
+    partial = sched_req(4, deadline=5.0, served=2)
+    s.add(partial)
+    assert s.expire_due(now=10.0) == []
+    assert s.pending_frames == 4  # untouched
+
+
+def test_shed_victims_picks_lowest_priority_latest_deadline():
+    s = MicroBatchScheduler()
+    low_late = sched_req(2, seq=0, priority=0)            # no deadline: latest
+    low_soon = sched_req(2, seq=1, priority=0, deadline=5.0)
+    high = sched_req(2, seq=2, priority=5, deadline=50.0)
+    for r in (low_late, low_soon, high):
+        s.add(r)
+    # newcomer at priority 1: both priority-0 requests rank below it; the
+    # deadline-less one is WORST and sheds first
+    victims = s.shed_victims(2, priority=1, deadline=None)
+    assert victims == [low_late]
+    assert s.stats()["shed"] == 1
+    assert s.pending_frames == 4
+    # needing more frames takes the next-worst too
+    victims = s.shed_victims(2, priority=1, deadline=None)
+    assert victims == [low_soon]
+    # nothing ranks below priority 1 anymore -> newcomer loses, queue intact
+    assert s.shed_victims(2, priority=1, deadline=None) is None
+    assert s.pending_frames == 2 and s.stats()["shed"] == 2
+
+
+def test_shed_victims_equal_priority_breaks_on_deadline():
+    s = MicroBatchScheduler()
+    urgent = sched_req(2, seq=0, priority=0, deadline=5.0)
+    relaxed = sched_req(2, seq=1, priority=0, deadline=50.0)
+    s.add(urgent)
+    s.add(relaxed)
+    # newcomer with a deadline between the two: only the later-deadline
+    # queued request ranks below it
+    victims = s.shed_victims(2, priority=0, deadline=10.0)
+    assert victims == [relaxed]
+    # the earlier-deadline request never ranks below this newcomer
+    assert s.shed_victims(2, priority=0, deadline=10.0) is None
+
+
+def test_shed_victims_never_touches_partially_served():
+    s = MicroBatchScheduler()
+    partial = sched_req(4, seq=0, priority=0, served=1)
+    s.add(partial)
+    assert s.shed_victims(1, priority=9, deadline=None) is None
+
+
+# ----------------------------------------------------------------------
+# Deadlines: server behavior
+# ----------------------------------------------------------------------
+def test_queued_deadline_expiry_spares_coalesced_neighbor():
+    """The acceptance scenario: a request expires while QUEUED; the
+    same-key request it would have coalesced with completes bit-exact."""
+    server, _ = make_server(session_kw={"max_bucket": 4})
+    keeper = server.submit(CLIP[:2])
+    doomed = server.submit(CLIP[2:4], timeout=0.02)
+    time.sleep(0.06)
+    out = keeper.result()  # drives the drain; expiry runs first
+    np.testing.assert_array_equal(np.asarray(out), oracle(CLIP[:2]))
+    with pytest.raises(DeadlineExceededError):
+        doomed.result()
+    s = server.scheduler_stats()
+    assert s["expired"] == 1
+    # the survivor dispatched alone: the expired frames left the queue
+    # BEFORE bucket sizing, so they never inflated the dispatch
+    assert s["dispatches"] == 1
+    assert s["recent_dispatches"][0]["frames"] == 2
+    # the server keeps serving afterwards
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(CLIP[4:6]).result()), oracle(CLIP[4:6]))
+
+
+def test_dead_on_arrival_fails_before_any_work():
+    server, session = make_server()
+    fut = server.submit(CLIP[:2], timeout=0.0)
+    assert fut.done()
+    with pytest.raises(DeadlineExceededError):
+        fut.result()
+    assert server.scheduler_stats()["expired"] == 1
+    assert server.scheduler_stats()["dispatches"] == 0
+    assert session.cache_stats()["entries"] == []  # nothing compiled
+
+
+def test_deadline_and_timeout_are_exclusive():
+    server, _ = make_server()
+    with pytest.raises(ValueError, match="not both"):
+        server.submit(CLIP[:2], deadline=time.monotonic() + 1, timeout=1)
+
+
+def test_flush_cancels_expired_work():
+    server, _ = make_server()
+    fut = server.submit(CLIP[:2], timeout=0.01)
+    time.sleep(0.05)
+    server.flush()
+    assert isinstance(fut.exception(), DeadlineExceededError)
+
+
+def test_exceptions_are_distinguishable():
+    assert issubclass(DeadlineExceededError, TimeoutError)
+    assert issubclass(RequestShedError, QueueFullError)
+    assert not issubclass(DeadlineExceededError, QueueFullError)
+
+
+# ----------------------------------------------------------------------
+# SRFuture.result(timeout=): wall-clock honored while driving the drain
+# ----------------------------------------------------------------------
+def test_result_timeout_honored_while_caller_drives_drain():
+    """A caller draining a deep queue gets TimeoutError when its budget
+    runs out mid-drain — not after the whole queue finishes."""
+    injector = FailureInjector(
+        delay_dispatches={k: 0.25 for k in range(16)})
+    server, _ = make_server(
+        session_kw={"max_bucket": 2}, injector=injector)
+    fut = server.submit(CLIP[:8])  # 4 dispatches x >= 0.25 s each
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.3)
+    elapsed = time.monotonic() - t0
+    # must bail after the dispatch it was inside, not drain all four
+    assert elapsed < 0.85
+    assert not fut.done()
+    # the request is NOT cancelled by a wait timeout: it still completes
+    np.testing.assert_array_equal(
+        np.asarray(fut.result()), oracle(CLIP[:8]))
+
+
+def test_wait_done_survives_spurious_wakeups():
+    """A notify without completion must neither return early nor shorten
+    the remaining wait: _wait_done loops on a monotonic deadline."""
+    class _FakeServer:
+        def _drain_until(self, fut, deadline=None):
+            pass  # another thread "owns" the drain
+
+    fut = SRFuture(_FakeServer())
+    stop = threading.Event()
+
+    def spam():
+        while not stop.is_set():
+            with fut._cond:
+                fut._cond.notify_all()
+            time.sleep(0.005)
+
+    spammer = threading.Thread(target=spam, daemon=True)
+    spammer.start()
+    try:
+        # under-wait guard: spurious wakeups must not break the timeout out
+        # early...
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=0.15)
+        assert time.monotonic() - t0 >= 0.15
+        # ...and a completion mid-wait is returned, not lost
+        finisher = threading.Timer(0.1, lambda: fut._finish(result=42))
+        finisher.start()
+        assert fut.result(timeout=5.0) == 42
+    finally:
+        stop.set()
+        spammer.join()
+
+
+# ----------------------------------------------------------------------
+# admission="shed"
+# ----------------------------------------------------------------------
+def test_shed_requires_a_bound():
+    with pytest.raises(ValueError, match="max_inflight_frames"):
+        make_server(admission="shed")
+
+
+def test_shed_evicts_lower_priority_for_newcomer():
+    server, _ = make_server(
+        session_kw={"max_bucket": 4},
+        max_inflight_frames=4, admission="shed")
+    victim = server.submit(CLIP[:4], priority=0)
+    keeper = server.submit(CLIP[4:6], priority=1)  # queue full: sheds victim
+    assert victim.done()
+    with pytest.raises(RequestShedError):
+        victim.result()
+    # RequestShedError IS a QueueFullError for coarse-grained handlers
+    assert isinstance(victim.exception(), QueueFullError)
+    np.testing.assert_array_equal(
+        np.asarray(keeper.result()), oracle(CLIP[4:6]))
+    s = server.scheduler_stats()
+    assert s["shed"] == 1 and s["rejected"] == 0
+
+
+def test_shed_rejects_newcomer_when_it_ranks_lowest():
+    server, _ = make_server(
+        session_kw={"max_bucket": 4},
+        max_inflight_frames=4, admission="shed")
+    queued = server.submit(CLIP[:4], priority=1)
+    with pytest.raises(QueueFullError):
+        server.submit(CLIP[4:6], priority=0)
+    s = server.scheduler_stats()
+    assert s["rejected"] == 1 and s["shed"] == 0
+    # the queued high-priority work is untouched and completes
+    np.testing.assert_array_equal(
+        np.asarray(queued.result()), oracle(CLIP[:4]))
+
+
+def test_shed_equal_priority_prefers_deadline_holders():
+    server, _ = make_server(
+        session_kw={"max_bucket": 4},
+        max_inflight_frames=4, admission="shed")
+    # no deadline = latest possible deadline = first to shed
+    relaxed = server.submit(CLIP[:4], priority=0)
+    urgent = server.submit(CLIP[4:6], priority=0, timeout=30.0)
+    with pytest.raises(RequestShedError):
+        relaxed.result()
+    np.testing.assert_array_equal(
+        np.asarray(urgent.result()), oracle(CLIP[4:6]))
+
+
+# ----------------------------------------------------------------------
+# DegradePolicy: the ladder itself
+# ----------------------------------------------------------------------
+def test_degrade_policy_validates():
+    with pytest.raises(ValueError):
+        DegradePolicy(0.0)
+    with pytest.raises(ValueError):
+        DegradePolicy(10.0, breach_steps=0)
+    with pytest.raises(ValueError):
+        DegradePolicy(10.0, recover_fraction=1.5)
+    with pytest.raises(ValueError):
+        make_server(degrade="not a policy")
+
+
+def test_degrade_steps_down_ladder_on_sustained_breach():
+    p = DegradePolicy(10.0, breach_steps=3)
+    for _ in range(2):
+        assert p.observe(100.0) is None  # two breaches: not yet
+    t = p.observe(100.0)
+    assert t is not None and t["reason"] == "slo_breach"
+    assert p.level == 1 and t["to_step"] == "bf16"
+    for _ in range(3):
+        p.observe(100.0)
+    assert p.level == 2
+    for _ in range(3):
+        p.observe(100.0)
+    assert p.level == 3  # ladder bottom
+    for _ in range(6):
+        p.observe(100.0)
+    assert p.level == 3  # clamped
+    assert [t["to_step"] for t in p.transitions] == list(DEGRADE_LADDER[1:])
+
+
+def test_degrade_recovers_with_hysteresis():
+    p = DegradePolicy(10.0, alpha=0.5, breach_steps=1, recover_steps=3)
+    p.observe(100.0)
+    p.observe(100.0)
+    assert p.level >= 1
+    for _ in range(200):
+        p.observe(1.0)
+    assert p.level == 0
+    assert any(t["reason"] == "recovered" for t in p.transitions)
+    # hysteresis: a single breach observation does not move the ladder
+    p2 = DegradePolicy(10.0, breach_steps=3)
+    p2.observe(100.0)
+    p2.observe(1.0)
+    assert p2.level == 0 and p2.transitions == []
+
+
+def test_degrade_knobs_follow_level():
+    p = DegradePolicy(10.0)
+    assert p.serve_dtype(np.float32) == np.float32
+    assert p.lookahead(4) == 4 and p.bucket_cap(8) == 8
+    p.level = 1
+    assert p.serve_dtype(np.float32).name == "bfloat16"
+    assert p.serve_dtype(np.int8) == np.int8  # only fp32 downcasts
+    assert p.lookahead(4) == 4
+    p.level = 2
+    assert p.lookahead(4) == 2 and p.lookahead(1) == 1
+    assert p.bucket_cap(8) == 8
+    p.level = 3
+    assert p.bucket_cap(8) == 4 and p.bucket_cap(1) == 1
+
+
+# ----------------------------------------------------------------------
+# DegradePolicy: wired into the server
+# ----------------------------------------------------------------------
+def test_degrade_ladder_visible_in_server_dispatches():
+    """With an unmeetable SLO every completion breaches: dispatch dtype
+    flips to bf16, then freshly derived buckets halve — all visible in
+    recent_dispatches — and stats() logs every transition."""
+    policy = DegradePolicy(1e-6, breach_steps=1)
+    server, _ = make_server(
+        session_kw={"max_bucket": 4}, degrade=policy)
+    out = server.submit(CLIP[:2]).result()  # level 0: served in fp32
+    np.testing.assert_array_equal(np.asarray(out), oracle(CLIP[:2]))
+    assert policy.level == 1
+    out = server.submit(CLIP[:2]).result()  # level 1: dispatches in bf16
+    assert str(out.dtype) == "bfloat16"
+    d = server.scheduler_stats()["recent_dispatches"][-1]
+    assert d["dtype"] == "bfloat16"
+    assert policy.level == 2
+    server.submit(CLIP[:2]).result()
+    assert policy.level == 3
+    # level 3: a 4-frame request's fresh bucket (4) halves to 2 -> two
+    # dispatches of bucket 2, the tail riding the pinned carry bucket
+    server.submit(CLIP[:4]).result()
+    buckets = [d["bucket"]
+               for d in server.scheduler_stats()["recent_dispatches"][-2:]]
+    assert buckets == [2, 2]
+    st = server.stats()["degrade"]
+    assert st["level"] == 3 and st["step"] == "half_buckets"
+    assert len(st["transitions"]) == 3
+    assert st["degraded_requests"] >= 1
+    assert st["p99_ms"] > st["slo_p99_ms"]
+
+
+def test_degrade_halves_stream_lookahead():
+    policy = DegradePolicy(10.0)
+    server, _ = make_server(degrade=policy)
+    policy.level = 2
+    assert policy.lookahead(4) == 2
+
+    import asyncio
+
+    async def run():
+        outs = []
+        async for hr in server.stream(list(CLIP[:4]), lookahead=4):
+            outs.append(np.asarray(hr))
+        return outs
+
+    outs = asyncio.run(run())
+    assert len(outs) == 4
+    # level 2 also includes the bf16 step, so compare at bf16 tolerance
+    np.testing.assert_allclose(
+        np.stack(outs).astype(np.float32), oracle(CLIP[:4]),
+        rtol=0, atol=1e-2)
+
+
+# ----------------------------------------------------------------------
+# Fault injection through the launch path
+# ----------------------------------------------------------------------
+def test_injected_dispatch_failure_is_isolated():
+    """Failing the k-th dispatch fails exactly that dispatch's requests;
+    earlier and later requests complete bit-exact and the server keeps
+    serving."""
+    injector = FailureInjector(fail_dispatches={1})
+    server, _ = make_server(session_kw={"max_bucket": 2}, injector=injector)
+    futs = [server.submit(CLIP[2 * i:2 * i + 2]) for i in range(3)]
+    server.flush()
+    np.testing.assert_array_equal(
+        np.asarray(futs[0].result()), oracle(CLIP[:2]))
+    with pytest.raises(InjectedFailure):
+        futs[1].result()
+    np.testing.assert_array_equal(
+        np.asarray(futs[2].result()), oracle(CLIP[4:6]))
+    assert injector.stats()["injected_failures"] == 1
+    # fresh traffic after the fault serves normally
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(CLIP[6:8]).result()), oracle(CLIP[6:8]))
+
+
+def test_poisoned_model_fails_only_its_own_traffic():
+    injector = FailureInjector(poison_models={"bad"})
+    server = SRServer(
+        {"good": make_session(), "bad": make_session()},
+        injector=injector,
+    )
+    ok = server.submit(CLIP[:2], model="good")
+    doomed = server.submit(CLIP[2:4], model="bad")
+    server.flush()
+    np.testing.assert_array_equal(np.asarray(ok.result()), oracle(CLIP[:2]))
+    with pytest.raises(InjectedFailure, match="poison"):
+        doomed.result()
+    # the poisoned model fails EVERY time; the good model keeps serving
+    with pytest.raises(InjectedFailure):
+        server.submit(CLIP[:2], model="bad").result()
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(CLIP[4:6], model="good").result()),
+        oracle(CLIP[4:6]))
+
+
+def test_injector_requires_on_dispatch():
+    with pytest.raises(ValueError, match="on_dispatch"):
+        make_server(injector=object())
+
+
+def test_close_releases_sessions_for_rehosting():
+    """A closed server hands its sessions back, warm caches included —
+    the load harness re-hosts one warm session set across server
+    configurations."""
+    session = make_session()
+    server = SRServer({"abpn": session})
+    np.testing.assert_array_equal(
+        np.asarray(server.submit(CLIP[:2]).result()), oracle(CLIP[:2]))
+    compiled = session.cache_stats()["entries"]
+    server.close()
+    successor = SRServer({"abpn": session}, max_inflight_frames=8,
+                         admission="shed")
+    np.testing.assert_array_equal(
+        np.asarray(successor.submit(CLIP[2:4]).result()), oracle(CLIP[2:4]))
+    assert session.cache_stats()["entries"] == compiled  # no recompile
+
+
+# ----------------------------------------------------------------------
+# admission="reject" under genuinely concurrent submits
+# ----------------------------------------------------------------------
+def test_concurrent_reject_no_hangs_no_lost_futures():
+    """Thread pool hammering a bounded reject-mode server: every request
+    either completes bit-exact or raises QueueFullError."""
+    oracle(CLIP[:1])  # build the oracle before threads race the global
+    server, _ = make_server(
+        session_kw={"max_bucket": 2},
+        max_inflight_frames=4, admission="reject")
+    threads, outcomes, errs = 6, [], []
+
+    def worker(tid):
+        for i in range(5):
+            start = (tid + i) % 7
+            frames = CLIP[start:start + 2]
+            try:
+                fut = server.submit(frames)
+            except QueueFullError:
+                outcomes.append(("rejected", None, None))
+                continue
+            try:
+                hr = fut.result(timeout=60)
+            except Exception as e:  # pragma: no cover - diagnostics
+                errs.append(e)
+                return
+            outcomes.append(("ok", start, np.asarray(hr)))
+
+    pool = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    for t in pool:
+        t.start()
+    for t in pool:
+        t.join(timeout=120)
+        assert not t.is_alive(), "worker hung"
+    assert errs == []
+    assert len(outcomes) == threads * 5  # no lost futures
+    served = [(s, hr) for kind, s, hr in outcomes if kind == "ok"]
+    assert served, "at least some requests must be admitted"
+    for start, hr in served:
+        np.testing.assert_array_equal(hr, oracle(CLIP[start:start + 2]))
+    s = server.scheduler_stats()
+    assert s["rejected"] == sum(1 for k, _, _ in outcomes if k == "rejected")
+    assert s["pending_frames"] == 0 and s["inflight_frames"] == 0

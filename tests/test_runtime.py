@@ -99,6 +99,37 @@ def test_straggler_detector_flags_outlier():
     assert d.flagged and d.flagged[0][0] == 20
 
 
+def test_straggler_detector_constant_warmup_then_spike():
+    """Regression: perfectly constant step times left var == 0 forever,
+    so the first real straggler scored z = 0 (the zero-variance guard)
+    and sailed through unflagged.  With var seeded from the first
+    nonzero delta and an infinite z on zero variance, a constant warmup
+    followed by a spike must FLAG the spike."""
+    d = StragglerDetector(z_threshold=3.0, warmup=3)
+    for i in range(10):
+        assert not d.update(i, 0.10)  # identical latencies: var stays 0
+    assert d.update(10, 0.5)  # 5x spike after zero-variance warmup
+    assert d.flagged and d.flagged[0][0] == 10
+    # the outlier was NOT folded into the mean
+    assert d.mean == pytest.approx(0.10)
+
+
+def test_ema_mean_var_seeds_var_from_first_delta():
+    from repro.runtime.resilience import EMAMeanVar
+
+    e = EMAMeanVar(alpha=0.1)
+    e.fold(0.10)
+    assert e.mean == pytest.approx(0.10) and e.var == 0.0
+    e.fold(0.12)  # first nonzero delta seeds var, not alpha-shrunk
+    assert e.var == pytest.approx(0.02**2)
+    assert e.std > 0
+    # zero-variance + nonzero delta -> infinite z (always past threshold)
+    e2 = EMAMeanVar()
+    e2.fold(1.0)
+    assert e2.zscore(1.0) == 0.0
+    assert e2.zscore(2.0) == float("inf")
+
+
 def test_lm_batches_deterministic_and_learnable():
     cfg = get_config("qwen2-0.5b").reduced()
     a = lm_batch(cfg, 5, 4, 32)

@@ -245,7 +245,7 @@ def test_engine_serving_sources_are_clean():
 def test_lint_default_targets_exist():
     targets = concurrency_lint.default_lint_targets()
     assert [p.name for p in targets] == [
-        "server.py", "scheduler.py", "session.py"
+        "server.py", "scheduler.py", "session.py", "resilience.py"
     ]
     assert all(p.exists() for p in targets)
 
@@ -290,8 +290,15 @@ def two():
             pass
 """
 
+WALL_CLOCK_SNIPPET = """
+import time
+class S:
+    def expire(self, deadline):
+        return time.time() >= deadline
+"""
+
 SAFE_SNIPPET = """
-import threading
+import threading, time
 class S:
     def __init__(self):
         self._lock = threading.Lock()
@@ -305,6 +312,9 @@ class S:
         jax.block_until_ready(hr)  # off-lock: the sanctioned discipline
         with self._lock:
             self.done = True
+    def deadline_ok(self, deadline):
+        # the sanctioned clocks for deadline/latency math
+        return time.monotonic() >= deadline or time.perf_counter() > 0
 """
 
 
@@ -313,6 +323,7 @@ class S:
     (AWAIT_SNIPPET, "await_under_lock"),
     (ASYNC_BLOCKING_SNIPPET, "blocking_in_async"),
     (CYCLE_SNIPPET, "lock_order_cycle"),
+    (WALL_CLOCK_SNIPPET, "wall_clock"),
 ])
 def test_lint_catches_seeded_violation(snippet, rule):
     findings = concurrency_lint.lint_source(snippet, "snippet.py")
