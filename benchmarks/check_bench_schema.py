@@ -9,8 +9,10 @@ rotting the recorded numbers.
     PYTHONPATH=src python benchmarks/check_bench_schema.py [path ...]
 
 Records are dispatched on their ``bench`` field: ``server_load``
-records (benchmarks/server_load.py) get the load-harness checks; any
-other record is assumed to be a BENCH_engine.json engine record.
+records (benchmarks/server_load.py) get the load-harness checks,
+``temporal_delta`` records (benchmarks/temporal_delta.py) get the
+delta-serving checks; any other record is assumed to be a
+BENCH_engine.json engine record.
 
 No third-party schema library: the required key sets live next to the
 producer (``engine_throughput.RECORD_KEYS``,
@@ -48,6 +50,13 @@ from server_load import (  # noqa: E402
     LOAD_MODE_KEYS,
     LOAD_POINT_KEYS,
     LOAD_RECORD_KEYS,
+)
+from temporal_delta import (  # noqa: E402
+    MIN_STATIC_COMPUTE_REDUCTION,
+    TEMPORAL_ACCEPTANCE_KEYS,
+    TEMPORAL_CACHE_KEYS,
+    TEMPORAL_CLIP_KEYS,
+    TEMPORAL_RECORD_KEYS,
 )
 
 
@@ -226,6 +235,66 @@ def check_server_load(rec: dict) -> list:
     return errors
 
 
+def check_temporal(rec: dict) -> list:
+    """All violations in one temporal_delta record (empty list = valid)."""
+    errors: list = []
+    _require(rec, TEMPORAL_RECORD_KEYS, "record", errors)
+    clips = rec.get("clips", [])
+    names = [c.get("clip") for c in clips]
+    for want in ("static", "panning", "full_motion"):
+        if want not in names:
+            errors.append(f"clips must include the {want!r} motion regime")
+    for i, c in enumerate(clips):
+        where = f"clips[{i}] ({c.get('clip')})"
+        _require(c, TEMPORAL_CLIP_KEYS, where, errors)
+        _require(c.get("cache", {}), TEMPORAL_CACHE_KEYS,
+                 f"{where}.cache", errors)
+        # the subsystem's contract: splicing cached bands NEVER changes
+        # the output, no matter the motion regime
+        if c.get("bit_exact") is not True:
+            errors.append(
+                f"{where}: bit_exact must be true — the delta splice "
+                "diverged from full re-upscale"
+            )
+        ratio = c.get("reuse_ratio")
+        if ratio is not None and not 0.0 <= ratio <= 1.0:
+            errors.append(f"{where}: reuse_ratio {ratio} outside [0, 1]")
+        served = c.get("bands_served")
+        skipped = c.get("bands_skipped")
+        total = c.get("bands_total")
+        if None not in (served, skipped, total) and served + skipped != total:
+            errors.append(
+                f"{where}: bands_served {served} + bands_skipped {skipped} "
+                f"!= bands_total {total} — a band was double-counted or "
+                "dropped from the splice accounting"
+            )
+    acc = rec.get("acceptance", {})
+    _require(acc, TEMPORAL_ACCEPTANCE_KEYS, "acceptance", errors)
+    # the headline claim: a static clip reuses enough to cut conv-stack
+    # compute by at least the committed floor
+    floor = acc.get("min_static_compute_reduction")
+    if floor is not None and floor < MIN_STATIC_COMPUTE_REDUCTION:
+        errors.append(
+            f"acceptance.min_static_compute_reduction {floor} is below "
+            f"the committed floor {MIN_STATIC_COMPUTE_REDUCTION}"
+        )
+    red = acc.get("static_compute_reduction")
+    if red is None or red < MIN_STATIC_COMPUTE_REDUCTION:
+        errors.append(
+            f"acceptance.static_compute_reduction {red} must be >= "
+            f"{MIN_STATIC_COMPUTE_REDUCTION} — the static clip did not "
+            "reuse enough to justify the delta path"
+        )
+    if acc.get("static_ok") is not True:
+        errors.append("acceptance.static_ok must be true")
+    if acc.get("all_bit_exact") is not True:
+        errors.append(
+            "acceptance.all_bit_exact must be true — delta serving "
+            "changed at least one frame's output"
+        )
+    return errors
+
+
 def main(argv) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     paths = argv[1:] or [os.path.join(root, "BENCH_engine.json")]
@@ -250,6 +319,23 @@ def main(argv) -> int:
                       f"{acc['block_p99_ms']} ms, shed {top['shed']}, "
                       f"expired {top['deadline_missed']}, "
                       f"degrade_level {top['degrade_level']})")
+            continue
+        if rec.get("bench") == "temporal_delta":
+            errors = check_temporal(rec)
+            if errors:
+                status = 1
+                print(f"{path}: SCHEMA DRIFT")
+                for e in errors:
+                    print(f"  - {e}")
+            else:
+                acc = rec["acceptance"]
+                pan = next(c for c in rec["clips"]
+                           if c["clip"] == "panning")
+                print(f"{path}: ok "
+                      f"(static compute x{acc['static_compute_reduction']} "
+                      f">= x{acc['min_static_compute_reduction']}, "
+                      f"panning reuse {pan['reuse_ratio']}, "
+                      f"bit_exact={acc['all_bit_exact']})")
             continue
         errors = check_record(rec)
         if errors:

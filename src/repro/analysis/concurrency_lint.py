@@ -302,13 +302,19 @@ def default_lint_targets(root: Optional[str] = None) -> List[Path]:
     call under a lock stalls live traffic.  ``runtime/resilience.py``
     joined the set when the server grew deadline/degrade/injection paths
     through it (its EMA core and FailureInjector run inside the serving
-    loop)."""
+    loop).  The ``engine/temporal`` sources joined with delta serving:
+    the output cache takes a lock on the splice path and DeltaSession
+    runs inside ``stream()``'s worker threads — the wall-clock and lock
+    rules apply to them from day one."""
     base = Path(root) if root else Path(__file__).resolve().parents[1]
     eng = base / "engine"
     return [
         eng / "server.py",
         eng / "scheduler.py",
         eng / "session.py",
+        eng / "temporal" / "band_diff.py",
+        eng / "temporal" / "delta_stream.py",
+        eng / "temporal" / "output_cache.py",
         base / "runtime" / "resilience.py",
     ]
 

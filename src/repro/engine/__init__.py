@@ -37,6 +37,15 @@ routes coalesced dispatches across ``R`` replicas
 (:class:`ReplicaRouter`: round-robin / least-loaded, per-replica compile
 caches; ``session.sharding_stats()``).
 
+Serving is DELTA-AWARE for video (temporal/): ``server.stream(...,
+delta=True)`` (or a :class:`DeltaSession` directly) band-diffs each
+frame against the previous one, dilates the changed bands by the halo
+reach, dispatches only the dirty bands as partial-band dispatches
+(``submit_bands`` -> ``Dispatch.band_subset`` through the same
+scheduler), and splices clean bands from a bounded refcounted
+:class:`OutputBandCache` keyed by receptive-field window digest —
+bit-exact vs full re-upscale (``session.stats()['temporal']``).
+
 Underneath: ``SRPlan`` (plan.py) describes one execution — geometry,
 numerics, boundary policy, backend — and ``build_executor``/``run``
 (executor.py) compile it into a single jitted call over a batch of LR
@@ -84,6 +93,7 @@ from repro.engine.scheduler import (
 from repro.engine.server import (
     DEGRADE_LADDER,
     DegradePolicy,
+    RequestCancelledError,
     SRFuture,
     SRServer,
 )
@@ -102,6 +112,7 @@ from repro.engine.sharding import (
     build_sharded_executor,
 )
 from repro.engine.stream import VideoStream
+from repro.engine.temporal import DeltaSession, OutputBandCache
 
 __all__ = [
     "SRServer",
@@ -110,8 +121,11 @@ __all__ = [
     "QueueFullError",
     "DeadlineExceededError",
     "RequestShedError",
+    "RequestCancelledError",
     "DegradePolicy",
     "DEGRADE_LADDER",
+    "DeltaSession",
+    "OutputBandCache",
     "SRSession",
     "PlanCache",
     "bucket_batch",

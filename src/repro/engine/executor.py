@@ -60,6 +60,7 @@ __all__ = [
     "PreparedStack",
     "build_executor",
     "build_stack_executor",
+    "build_band_executor",
     "executor_artifacts",
     "output_spec",
     "plan_cost",
@@ -349,6 +350,103 @@ def build_stack_executor(
     fn = functools.partial(jitted, plan, stack)
     fn.jitted = jitted
     fn.donates_frames = donate_frames
+    return fn
+
+
+def _band_features(
+    plan: SRPlan, stack: PreparedStack, slabs: jax.Array, bounds: jax.Array
+) -> jax.Array:
+    """Conv-stack features over an explicit band-slab stack.
+
+    ``slabs`` is (k, rows, W, C0) with rows = R + 2L under ``halo`` (the
+    ``core.fusion.halo_slabs`` geometry, ``bounds`` carrying each slab's
+    valid-row interval) and rows = R otherwise.  Per band this runs the
+    SAME per-slab computation as the full-frame path — the tilted
+    backend maps the identical ``tilted_fused_band`` closure, the kernel
+    backend runs the identical sequential band grid — so each output
+    band is bit-identical to the corresponding band of a full launch.
+    The reference backend has no band decomposition and cannot serve
+    partial dispatches.
+    """
+    R, L = plan.band_rows, plan.num_layers
+    policy = plan.vertical_policy
+    if plan.backend == "kernel":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.tilted_fused_band_stack(
+            slabs,
+            tile_cols=plan.tile_cols,
+            vertical_policy=policy,
+            row_bounds=bounds if policy == "halo" else None,
+            compute_dtype=slabs.dtype,
+            packed=stack.packed,
+        )
+    if plan.backend != "tilted":
+        raise ValueError(
+            f"backend {plan.backend!r} cannot serve partial-band dispatches "
+            "(no band decomposition); use 'tilted' or 'kernel'"
+        )
+    layers = stack.layers
+    if policy in ("zero", "replicate"):
+        return jax.vmap(
+            lambda band: tilted_fused_band(
+                band, layers, plan.tile_cols, row_pad=policy
+            )
+        )(slabs)
+    out = jax.vmap(
+        lambda band, l, h: tilted_fused_band(
+            band, layers, plan.tile_cols, row_pad="zero", row_valid=(l, h)
+        )
+    )(slabs, bounds[:, 0], bounds[:, 1])
+    return out[:, L : L + R]  # crop the recompute margin
+
+
+def _execute_band_stack(
+    plan: SRPlan, stack: PreparedStack, slabs: jax.Array, bounds: jax.Array
+) -> jax.Array:
+    """Partial-band serving program: band slabs -> HR bands.
+
+    The temporal delta path's executor body: (k, rows, W, C) input slabs
+    (plus (k, 2) int32 valid-row bounds, meaningful under ``halo`` and
+    dead-code-eliminated otherwise) -> (k, R*s, W*s, C) upscaled bands.
+    The epilogue is row-block local (see :func:`sr_epilogue`), so running
+    it on each band's own LR rows reproduces the full-frame epilogue's
+    bytes for those rows exactly.
+    """
+    if slabs.ndim != 4:
+        raise ValueError(
+            f"expected a band-slab batch (k, rows, W, C), got {slabs.shape}"
+        )
+    in_dtype = slabs.dtype
+    x = slabs.astype(compute_dtype_for(plan.precision))
+    feats = _band_features(plan, stack, x, bounds)
+    if plan.vertical_policy == "halo":
+        L = plan.num_layers
+        lr = x[:, L : L + plan.band_rows]  # each slab's own (anchor) rows
+    else:
+        lr = x
+    return sr_epilogue(plan, lr, feats, in_dtype)
+
+
+def build_band_executor(
+    plan: SRPlan, stack: PreparedStack
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Compile the partial-band executor ``(slabs, bounds) -> HR bands``.
+
+    Same shape as :func:`build_stack_executor` (own jit wrapper exposed
+    as ``.jitted``, stack as a pytree argument) but never donates: band
+    slabs are a small fraction of a frame and the splice path reads the
+    dispatch result immediately.
+    """
+    plan.check_invariants()
+    if plan.backend == "reference":
+        raise ValueError(
+            "reference backend cannot serve partial-band dispatches"
+        )
+    jitted = jax.jit(_execute_band_stack, static_argnums=0)
+    fn = functools.partial(jitted, plan, stack)
+    fn.jitted = jitted
+    fn.donates_frames = False
     return fn
 
 

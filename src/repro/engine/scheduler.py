@@ -113,6 +113,11 @@ class SchedRequest:
     # admission timestamp (time.monotonic()) — end-to-end latency anchor
     # for the server's degrade policy
     admitted_at: float = 0.0
+    # partial-band request (temporal delta serving): the band indices the
+    # ``n`` slab rows of ``flat`` correspond to.  None = whole frames.
+    # Band requests use a "bands"-suffixed key, so the coalescer never
+    # mixes band slabs and frames in one dispatch.
+    bands: Optional[tuple] = None
     served: int = 0
     completed: int = 0
     pieces: List = dataclasses.field(default_factory=list)
@@ -143,6 +148,9 @@ class Dispatch:
     # replica index the server routed this dispatch to (mesh serving;
     # recorded at launch, None on single-device sessions)
     replica: Optional[int] = None
+    # partial-band dispatch (temporal delta serving): the band index each
+    # real slab row serves, in slot order.  None = a whole-frame dispatch.
+    band_subset: Optional[tuple] = None
 
     @property
     def real(self) -> int:
@@ -366,8 +374,16 @@ class MicroBatchScheduler:
             self._carry.pop(key, None)
         if not q:
             del self._queues[key]
+        subset: Optional[tuple] = None
+        if tickets[0].request.bands is not None:
+            # band requests only ever share a queue with band requests
+            # (the "bands" key marker), so every ticket carries indices
+            picked: List[int] = []
+            for t in tickets:
+                picked.extend(t.request.bands[t.start : t.start + t.n])
+            subset = tuple(picked)
         d = Dispatch(key=key, session=session, plan=tickets[0].request.plan,
-                     bucket=bucket, tickets=tickets)
+                     bucket=bucket, tickets=tickets, band_subset=subset)
         self.pending_frames -= d.real
         self.dispatches += 1
         if len(d.requests) > 1:
@@ -383,6 +399,7 @@ class MicroBatchScheduler:
             "fill": d.fill,
             "requests": len(d.requests),
             "priority": max(t.request.priority for t in tickets),
+            "bands": None if subset is None else list(subset),
         })
         return d
 
@@ -413,4 +430,7 @@ class MicroBatchScheduler:
             "expired": self.expired,
             "shed": self.shed,
             "replica_dispatches": dict(self.replica_dispatches),
+            # live carry pins — an abandoned clip must release its pinned
+            # bucket (the stream-cleanup leak test asserts this hits 0)
+            "carry_buckets": len(self._carry),
         }

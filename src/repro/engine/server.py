@@ -88,11 +88,16 @@ __all__ = [
     "QueueFullError",
     "DeadlineExceededError",
     "RequestShedError",
+    "RequestCancelledError",
     "DegradePolicy",
     "DEGRADE_LADDER",
 ]
 
 ADMISSION_POLICIES = ("block", "reject", "shed")
+
+
+class RequestCancelledError(RuntimeError):
+    """The submitter cancelled the request (e.g. an abandoned stream)."""
 
 # The degradation ladder, mildest first; level k applies steps 1..k.
 DEGRADE_LADDER = ("full", "bf16", "half_lookahead", "half_buckets")
@@ -249,6 +254,9 @@ class SRFuture:
         self._result = None
         self._exc: Optional[BaseException] = None
         self._callbacks = []
+        # backref to the admitted SchedRequest — what SRServer.cancel
+        # uses to drop the queued remainder of an abandoned request
+        self._request = None
 
     def done(self) -> bool:
         return self._done
@@ -546,16 +554,21 @@ class SRServer:
             )
         return name
 
+    def _name_for(self, session: SRSession) -> str:
+        """The hosted name of a session (identity lookup)."""
+        for name, s in self._sessions.items():
+            if s is session:
+                return name
+        raise ValueError("session is not hosted by this server")
+
     def submit_for(self, session: SRSession, frames, *, priority: int = 0,
                    deadline: Optional[float] = None,
                    timeout: Optional[float] = None) -> SRFuture:
         """Submit addressed by hosted session identity rather than name —
         what ``SRSession.submit`` calls on its hosting server."""
-        for name, s in self._sessions.items():
-            if s is session:
-                return self.submit(frames, model=name, priority=priority,
-                                   deadline=deadline, timeout=timeout)
-        raise ValueError("session is not hosted by this server")
+        return self.submit(frames, model=self._name_for(session),
+                           priority=priority, deadline=deadline,
+                           timeout=timeout)
 
     def submit(self, frames, *, model: Optional[str] = None,
                priority: int = 0, deadline: Optional[float] = None,
@@ -639,11 +652,99 @@ class SRServer:
             lead=lead,
             deadline=deadline,
         )
+        fut._request = req
         self._admit(req)
         if degraded:
             with self._lock:
                 self._degrade.degraded_requests += 1
         return fut
+
+    def submit_bands(self, slabs, bands, *, plan, model: Optional[str] = None,
+                     priority: int = 0) -> SRFuture:
+        """Queue a partial-band request (the temporal delta path).
+
+        ``slabs`` is a host ``(k, rows, W, C)`` array of per-band input
+        slabs in the plan's band-input geometry (``rows = R + 2L`` under
+        ``halo``, the ``core.fusion.halo_slabs`` layout; ``R`` rows
+        otherwise) and ``bands`` the matching strictly-increasing band
+        indices.  The future resolves to the ``(k, R*s, W*s, C)`` HR
+        band stack.  Band requests ride the same scheduler as frames
+        under a ``"bands"``-suffixed coalescing key (queue units are
+        BANDS, so backpressure/expiry/shedding apply unchanged, but a
+        band slab never shares a dispatch with a frame).  The degrade
+        policy's dtype ladder is deliberately NOT applied: delta
+        streams' contract is bit-exactness with full re-upscale, and a
+        mid-clip downcast would poison the output cache.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        from repro.engine.temporal.band_diff import band_input_rows
+
+        name = self._resolve_model(model)
+        session = self._sessions[name]
+        bands = tuple(int(b) for b in bands)
+        if not bands:
+            raise ValueError("submit_bands needs at least one band")
+        if any(b2 <= b1 for b1, b2 in zip(bands, bands[1:])):
+            raise ValueError(f"bands must be strictly increasing: {bands}")
+        if bands[0] < 0 or bands[-1] >= plan.num_bands:
+            raise ValueError(
+                f"bands {bands} out of range [0, {plan.num_bands})"
+            )
+        flat = np.asarray(slabs)
+        dtype = session.serving_dtype(flat.dtype)
+        flat = np.ascontiguousarray(flat.astype(dtype, copy=False))
+        rows = band_input_rows(
+            plan.band_rows, plan.num_layers, plan.vertical_policy
+        )
+        want = (len(bands), rows, plan.width, plan.in_channels)
+        if flat.shape != want:
+            raise ValueError(
+                f"band slabs shape {flat.shape} != expected {want} for "
+                f"{len(bands)} band(s) of plan {plan.height}x{plan.width} "
+                f"({plan.vertical_policy})"
+            )
+        fut = SRFuture(self)
+        req = SchedRequest(
+            seq=0,  # assigned under the lock in _admit
+            key=(name, plan, dtype.name, "bands"),
+            session=session,
+            plan=plan,
+            flat=flat,
+            n=len(bands),
+            priority=int(priority),
+            future=fut,
+            ndim=4,  # identity assembly: the future gets the raw stack
+            lead=None,
+            bands=bands,
+        )
+        fut._request = req
+        self._admit(req)
+        return fut
+
+    def cancel(self, fut: SRFuture) -> bool:
+        """Best-effort cancel of a submitted request (the stream-abandon
+        path).  The queued remainder is dropped — releasing any
+        carry-pinned bucket — and the future fails with
+        :class:`RequestCancelledError`; frames already inside an
+        in-flight dispatch complete on-device and are discarded.
+        Returns False if the future is already resolved (its result
+        stands) or was never admitted."""
+        req = fut._request
+        if req is None:
+            return False
+        with self._lock:
+            if fut.done():
+                return False
+            req.failed = True
+            self._sched.drop(req)
+            fut._finish(exc=RequestCancelledError(
+                "request cancelled by its submitter"
+            ))
+            self._just_finished.append(fut)
+            finished = self._take_finished()
+        self._run_finished(finished)
+        return True
 
     def _expire_locked(self, now: float) -> None:
         """Cancel queued past-deadline requests (call holding the lock):
@@ -849,7 +950,14 @@ class SRServer:
         try:
             # executor resolution may compile — on a dummy, before the
             # timed dispatch starts, exactly like the pre-server path
-            entry, _ = session.executor_for(d.plan, d.bucket, np.dtype(d.key[2]))
+            if d.band_subset is not None:
+                entry, _ = session.band_executor_for(
+                    d.plan, d.bucket, np.dtype(d.key[2])
+                )
+            else:
+                entry, _ = session.executor_for(
+                    d.plan, d.bucket, np.dtype(d.key[2])
+                )
             if self._injector is not None:
                 # fault-injection point (tests/load harness): a raise here
                 # flows through _fail_dispatch below — exactly this
@@ -857,9 +965,15 @@ class SRServer:
                 self._injector.on_dispatch(
                     model=d.key[0], replica=getattr(entry, "replica", None)
                 )
-            slab, used_staging = self._assemble(d, entry.donates)
-            t0 = time.perf_counter()
-            hr = entry.fn(slab)  # async dispatch: returns immediately
+            if d.band_subset is not None:
+                slab, bounds = self._assemble_bands(d)
+                used_staging = False
+                t0 = time.perf_counter()
+                hr = entry.fn(slab, bounds)  # async dispatch
+            else:
+                slab, used_staging = self._assemble(d, entry.donates)
+                t0 = time.perf_counter()
+                hr = entry.fn(slab)  # async dispatch: returns immediately
             session._dispatch_ms.append((time.perf_counter() - t0) * 1e3)
         except BaseException as e:
             self._fail_dispatch(d, e)
@@ -932,6 +1046,31 @@ class SRServer:
                                     pieces[0].dtype))
         return jnp.concatenate(pieces, axis=0), False
 
+    def _assemble_bands(self, d: Dispatch):
+        """Build a band dispatch's ``(slab, bounds)`` device pair.
+
+        Band slabs always stage through a fresh host buffer — never the
+        session's shared staging buffer, whose shape bookkeeping is
+        per-frame — and the per-slot valid-row bounds are derived
+        statically from the dispatched band indices (the same
+        ``halo_slabs`` clip formula; ``band_diff.band_bounds`` is its
+        host mirror).  Padded slots keep ``(0, 0)``: every row phantom,
+        so a padding slab computes zero features and its HR rows are
+        never read back.
+        """
+        from repro.engine.temporal.band_diff import band_bounds
+
+        plan = d.plan
+        first = d.tickets[0].request.flat
+        buf = np.zeros((d.bucket, *first.shape[1:]), first.dtype)
+        for t in d.tickets:
+            buf[t.slot:t.slot + t.n] = t.request.flat[t.start:t.start + t.n]
+        bounds = band_bounds(
+            plan.height, plan.band_rows, plan.num_layers, d.band_subset,
+            slots=d.bucket,
+        )
+        return jax.device_put(buf), jax.device_put(bounds)
+
     def _finalize_complete(self, inf: _Inflight,
                            error: Optional[BaseException]) -> None:
         """Bookkeeping for a completed (or device-failed) dispatch — runs
@@ -953,7 +1092,13 @@ class SRServer:
             self._fail_dispatch(d, error)
             return
         session._complete_ms.append((now - inf.t0) * 1e3)
-        session._frames += d.real
+        if d.band_subset is None:
+            session._frames += d.real
+        else:
+            # partial-band traffic: counted in band-rows of compute, not
+            # frames — the temporal stats' reuse accounting keys off this
+            session._band_rows_served += d.real * d.plan.band_rows
+            session._band_dispatches += 1
         for t in d.tickets:
             r = t.request
             if r.failed:
@@ -998,7 +1143,9 @@ class SRServer:
     # Streaming
     # ------------------------------------------------------------------
     async def stream(self, frames, *, model: Optional[str] = None,
-                     priority: int = 0, lookahead: int = 4):
+                     priority: int = 0, lookahead: int = 4,
+                     delta: bool = False,
+                     cache_bytes: Optional[int] = None):
         """Serve an iterable of frames one at a time; yields HR frames in
         order (an async generator — ``async for hr in server.stream(...)``).
 
@@ -1010,29 +1157,61 @@ class SRServer:
         streams interleave.  Under an active :class:`DegradePolicy` at
         level >= 2 the window is halved — re-read each turn, so a
         mid-stream transition takes effect on the next frame.
+
+        ``delta=True`` serves the clip through a
+        :class:`~repro.engine.temporal.DeltaSession`: each frame is
+        band-diffed against the previous one, only dirty bands dispatch
+        (as partial-band dispatches), and clean bands splice from the
+        session's output cache — bit-exact vs full re-upscale.  Delta
+        streams are sequential by construction (frame k's dirty set
+        needs frame k-1's digests), so ``lookahead`` does not apply;
+        ``cache_bytes`` bounds the output cache.  Abandoning either kind
+        of stream (closing the generator mid-clip) cancels its pending
+        requests and releases its cache pins — no carry bucket or
+        refcount leaks.
         """
         import asyncio
+
+        if delta:
+            from repro.engine.temporal import DeltaSession
+
+            ds = DeltaSession(self.session(model), server=self,
+                              priority=priority, cache_bytes=cache_bytes)
+            try:
+                for frame in frames:
+                    yield await asyncio.to_thread(ds.serve, frame)
+            finally:
+                ds.close()
+            return
 
         base = max(1, int(lookahead))
         pending: Deque[SRFuture] = deque()
         it = iter(frames)
         exhausted = False
-        while pending or not exhausted:
-            window = (self._degrade.lookahead(base)
-                      if self._degrade is not None else base)
-            while not exhausted and len(pending) < window:
-                try:
-                    frame = next(it)
-                except StopIteration:
-                    exhausted = True
-                    break
-                # submit off the loop too: with a full bounded queue and
-                # admission="block" it drains (device waits) until space
-                pending.append(await asyncio.to_thread(
-                    self.submit, frame, model=model, priority=priority))
-            if pending:
-                fut = pending.popleft()
-                yield await asyncio.to_thread(fut.result)
+        try:
+            while pending or not exhausted:
+                window = (self._degrade.lookahead(base)
+                          if self._degrade is not None else base)
+                while not exhausted and len(pending) < window:
+                    try:
+                        frame = next(it)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    # submit off the loop too: with a full bounded queue
+                    # and admission="block" it drains (device waits)
+                    # until space
+                    pending.append(await asyncio.to_thread(
+                        self.submit, frame, model=model, priority=priority))
+                if pending:
+                    fut = pending.popleft()
+                    yield await asyncio.to_thread(fut.result)
+        finally:
+            # abandoned mid-clip: drop the lookahead window's queued
+            # frames so they don't dispatch (or pin a carry bucket) for
+            # a consumer that is gone
+            while pending:
+                self.cancel(pending.popleft())
 
     # ------------------------------------------------------------------
     # Lifecycle

@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.engine.executor import (
     PreparedStack,
+    build_band_executor,
     build_stack_executor,
     output_spec,
     prepare_stack,
@@ -418,6 +419,23 @@ class SRSession:
         self._span_s = 0.0
         self._frames = 0
         self._peak_inflight = 0
+        # temporal delta serving (engine.temporal): partial-band dispatch
+        # counters (bumped by the server at completion) plus the per-frame
+        # reuse accounting DeltaSession maintains; the output cache is
+        # created on first delta use
+        self._band_rows_served = 0
+        self._band_dispatches = 0
+        self._temporal_counts: Dict[str, int] = {
+            "frames": 0,
+            "bands_total": 0,
+            "bands_skipped": 0,
+            "band_rows_total": 0,
+            "band_rows_served": 0,
+            "hbm_bytes_full": 0,
+            "hbm_bytes_served": 0,
+            "cover_violations": 0,
+        }
+        self._output_cache = None
         # the SRServer submit()/upscale() serve through: set by the first
         # server that hosts this session, else an embedded single-model
         # server created lazily on first submit
@@ -798,6 +816,63 @@ class SRSession:
         self._cache.put(key, entry)
         return entry, True
 
+    def band_executor_for(
+        self, plan: SRPlan, bucket: int, dtype
+    ) -> Tuple[_CacheEntry, bool]:
+        """The compiled partial-band executor for ``(plan, bucket, dtype)``
+        — the temporal delta path's program:
+        ``(bucket, rows, W, C) slabs + (bucket, 2) bounds -> HR bands``.
+
+        Lives in the same :class:`PlanCache` under a ``"bands"``-suffixed
+        key with the same refcounted weight-stack sharing, warmed on zero
+        dummies like the frame path.  Never donates (band slabs are small
+        and the splice reads the result immediately).  On a mesh session
+        the program compiles locally, unsharded: a partial-band dispatch
+        is below the granularity band sharding pays off at, and single-
+        device vs sharded full-frame outputs are already bit-exact, so
+        the splice guarantee holds transitively.
+        """
+        if plan.backend == "reference":
+            raise ValueError(
+                "partial-band serving needs a banded backend (tilted or "
+                "kernel); the reference backend computes whole frames"
+            )
+        dtype = self.serving_dtype(dtype)
+        key = (plan, int(bucket), dtype.name, "bands")
+        entry = self._cache.get(key)
+        if entry is not None:
+            return entry, False
+        from repro.engine.temporal.band_diff import band_input_rows
+
+        stack, skey = self._acquire_stack(plan)
+        try:
+            fn = build_band_executor(plan, stack)
+            rows = band_input_rows(
+                plan.band_rows, plan.num_layers, plan.vertical_policy
+            )
+            dummy = jnp.zeros(
+                (bucket, rows, plan.width, plan.in_channels), dtype
+            )
+            dbounds = jnp.zeros((bucket, 2), jnp.int32)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(dummy, dbounds))
+            compile_s = time.perf_counter() - t0
+        except BaseException:
+            self._release_stack(skey)
+            raise
+        entry = _CacheEntry(
+            fn=fn,
+            plan=plan,
+            bucket=int(bucket),
+            dtype=dtype.name,
+            compile_s=compile_s,
+            stack_key=skey,
+            donates=False,
+        )
+        self._compile_counts[key] = self._compile_counts.get(key, 0) + 1
+        self._cache.put(key, entry)
+        return entry, True
+
     def output_dtype(self, plan: SRPlan, dtype) -> np.dtype:
         """The dtype the compiled executor emits for ``dtype`` input
         (abstract eval — no compile, memoised), so degenerate paths —
@@ -902,14 +977,21 @@ class SRSession:
         (absolute monotonic seconds) / ``timeout`` (relative) bound the
         request's QUEUED lifetime — see ``SRServer.submit``.
         """
+        return self._host_server().submit_for(
+            self, frames, priority=priority,
+            deadline=deadline, timeout=timeout)
+
+    def _host_server(self):
+        """The server this session serves through — the hosting
+        :class:`~repro.engine.server.SRServer` if one registered itself,
+        else an embedded single-model server created on first use."""
         if self._server is None:
             from repro.engine.server import SRServer  # lazy: avoids a cycle
 
             # (SRServer.__init__ also registers itself on the session —
             # the assignment is the same object, stated explicitly)
             self._server = SRServer({self.model or "session": self})
-        return self._server.submit_for(self, frames, priority=priority,
-                                       deadline=deadline, timeout=timeout)
+        return self._server
 
     def upscale(self, frames) -> jax.Array:
         """Super-resolve frames of any supported rank (blocking).
@@ -1012,6 +1094,8 @@ class SRSession:
         the timed span).  Percentiles split dispatch (enqueue) from
         complete (result ready); ``fps`` is real frames over the serving
         wall-clock span, so pipelined overlap shows up as throughput."""
+        if self._temporal_counts["frames"] and "temporal" not in extra:
+            extra["temporal"] = self.temporal_stats()
         return latency_stats(
             self._complete_ms,
             self._frames,
@@ -1020,6 +1104,60 @@ class SRSession:
             peak_inflight=self._peak_inflight,
             **extra,
         )
+
+    def output_cache(self, max_bytes: Optional[int] = None):
+        """The session's HR output-band cache (temporal delta serving),
+        created on first use.  ``max_bytes`` only applies at creation —
+        later callers share whatever bound the first one set."""
+        if self._output_cache is None:
+            from repro.engine.temporal.output_cache import (  # lazy: no cycle
+                DEFAULT_CACHE_BYTES,
+                OutputBandCache,
+            )
+
+            self._output_cache = OutputBandCache(
+                max_bytes=DEFAULT_CACHE_BYTES if max_bytes is None
+                else max_bytes
+            )
+        return self._output_cache
+
+    def temporal_stats(self) -> dict:
+        """Delta-serving counters (the ``temporal`` section of
+        :meth:`stats`).
+
+        ``reuse_ratio`` is spliced-from-cache bands over all bands of
+        delta-served frames; ``band_rows_*`` count LR rows of conv-stack
+        compute (``served / total`` is the compute fraction the delta
+        path actually ran).  ``effective_hbm_bytes_per_frame`` models
+        the paper's DRAM-traffic metric for the delta path: the LR slab
+        bytes dispatched plus the HR band bytes written, per frame —
+        weights excluded (they are resident either way) — next to
+        ``full_hbm_bytes_per_frame``, the same model for full
+        re-upscale.
+        """
+        t = self._temporal_counts
+        frames = t["frames"]
+        total = t["bands_total"]
+        out = {
+            "frames": frames,
+            "bands_total": total,
+            "bands_skipped": t["bands_skipped"],
+            "reuse_ratio": t["bands_skipped"] / total if total else 0.0,
+            "band_rows_total": t["band_rows_total"],
+            "band_rows_served": t["band_rows_served"],
+            "band_dispatches": self._band_dispatches,
+            # server-side truth: band-rows across ALL partial dispatches
+            # (any submit_bands caller), vs the delta accounting above
+            "band_rows_dispatched": self._band_rows_served,
+            "effective_hbm_bytes_per_frame":
+                t["hbm_bytes_served"] / frames if frames else 0.0,
+            "full_hbm_bytes_per_frame":
+                t["hbm_bytes_full"] / frames if frames else 0.0,
+            "cover_violations": t["cover_violations"],
+        }
+        if self._output_cache is not None:
+            out["cache"] = self._output_cache.stats()
+        return out
 
     def sharding_stats(self) -> Optional[dict]:
         """Mesh routing stats (replica dispatch balance, per-replica
@@ -1034,3 +1172,7 @@ class SRSession:
         self._span_s = 0.0
         self._frames = 0
         self._peak_inflight = 0
+        self._band_rows_served = 0
+        self._band_dispatches = 0
+        for k in self._temporal_counts:
+            self._temporal_counts[k] = 0

@@ -1,0 +1,278 @@
+"""Delta-aware video serving: diff, dispatch dirty bands, splice.
+
+:class:`DeltaSession` is the temporal subsystem's driver.  Per frame:
+
+1. cast to the session's serving dtype and digest every band's own rows
+   (``band_diff.band_digests``);
+2. diff against the previous frame's digests and dilate the changed set
+   by the halo reach (``band_diff.dilate_dirty``) — a changed band
+   invalidates every neighbor whose receptive field it feeds;
+3. verify the splice partition (``plan_check.verify_delta_cover``): the
+   dirty set plus the cached clean bands must cover every output row
+   exactly once and dominate the dilation — a violation raises before
+   anything dispatches (splice correctness is the subsystem's contract,
+   so the rule is always strict);
+4. dispatch ONLY the dirty bands as one partial-band request
+   (``SRServer.submit_bands`` -> ``Dispatch.band_subset`` through the
+   micro-batch scheduler) with input slabs marshalled host-side in the
+   exact ``core.fusion.halo_slabs`` geometry;
+5. splice the HR frame: fresh rows from the dispatch, clean rows from
+   the :class:`~repro.engine.temporal.output_cache.OutputBandCache`,
+   keyed by ``(plan, band, window_digest)`` — the digest of the band's
+   full receptive-field window, so a hit PROVES the cached rows were
+   computed from byte-identical input.
+
+That proof is the bit-exactness argument end to end: identical window
+bytes -> identical executor input (band slabs mirror ``halo_slabs``
+byte-for-byte) -> identical per-band program (the band executor runs
+the same per-slab computation the full-frame path vmaps/grids over,
+and band outputs are independent of batch composition) -> identical HR
+rows.  The parity tests assert equality with full re-upscale per
+backend x boundary policy, including against a band-sharded mesh
+session's full path.
+
+Delta streams are sequential by construction — frame k's dirty set
+needs frame k-1's digests — so there is no cross-frame lookahead.  They
+also bypass the server's degrade dtype ladder (a mid-clip downcast
+would poison the cache and break the contract) and, on mesh sessions,
+band sharding: partial dispatches run on the local device, and the
+guarantee vs the sharded full path holds transitively because sharded
+vs single-device full re-upscale is already bit-exact.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.engine.temporal.band_diff import (
+    band_digests,
+    band_input_rows,
+    band_slabs,
+    changed_bands,
+    dilate_dirty,
+    window_digest,
+)
+from repro.engine.temporal.output_cache import OutputBandCache
+
+__all__ = ["DeltaSession"]
+
+
+class DeltaSession:
+    """Serve a video stream delta-aware against one hosted session.
+
+    ``session`` must use a banded backend (``tilted`` | ``kernel``) —
+    the reference backend has no band decomposition to reuse.
+    ``server`` defaults to the session's hosting/embedded server;
+    ``cache_bytes`` bounds the shared output cache (only applied when
+    this call creates it).  Not thread-safe per instance (the cache it
+    shares is); run one ``DeltaSession`` per stream.
+    """
+
+    def __init__(self, session, *, server=None, priority: int = 0,
+                 cache_bytes: Optional[int] = None):
+        if session.backend == "reference":
+            raise ValueError(
+                "delta serving needs a banded backend (tilted or kernel); "
+                "the reference backend computes whole frames"
+            )
+        self.session = session
+        self._server = server if server is not None else session._host_server()
+        self._model = self._server._name_for(session)
+        self._priority = int(priority)
+        self._cache: OutputBandCache = session.output_cache(cache_bytes)
+        self._plan = None
+        self._prev_own: Optional[Tuple[bytes, ...]] = None
+        self._prev_window: List[Optional[bytes]] = []
+        self._pinned: List[tuple] = []
+        self._inflight = None
+        self._closed = False
+        self.frames = 0
+
+    # ------------------------------------------------------------------
+    def _reset_plan(self, plan) -> None:
+        """A resolution/plan switch resets temporal state (digests keyed
+        to the old geometry are meaningless); cache pins carry the OLD
+        plan in their keys and are released."""
+        for key in self._pinned:
+            self._cache.unpin(key)
+        self._pinned = []
+        self._plan = plan
+        self._prev_own = None
+        self._prev_window = [None] * plan.num_bands
+
+    def _key(self, plan, band: int, digest: bytes) -> tuple:
+        return (plan, int(band), digest)
+
+    def serve(self, frame) -> np.ndarray:
+        """Upscale one ``(H, W, C)`` frame, reusing cached output bands
+        (blocking; returns the HR frame as host numpy)."""
+        if self._closed:
+            raise RuntimeError("DeltaSession is closed")
+        session = self.session
+        arr = np.asarray(frame)
+        if arr.ndim != 3:
+            raise ValueError(
+                f"DeltaSession serves single (H, W, C) frames, got rank "
+                f"{arr.ndim}"
+            )
+        dtype = session.serving_dtype(arr.dtype)
+        arr = np.ascontiguousarray(arr.astype(dtype, copy=False))
+        plan = session.plan_for(tuple(int(x) for x in arr.shape))
+        if plan is not self._plan:
+            self._reset_plan(plan)
+        num_bands = plan.num_bands
+        own = band_digests(arr, plan.band_rows)
+        if self._prev_own is None:
+            changed = set(range(num_bands))
+        else:
+            changed = changed_bands(own, self._prev_own)
+        dirty = dilate_dirty(
+            changed, num_bands, plan.band_rows, plan.num_layers,
+            plan.vertical_policy,
+        )
+        # window digests: recompute for dirty bands; a clean band's window
+        # is unchanged by the dilation invariant, so its digest carries over
+        window = list(self._prev_window)
+        for b in dirty:
+            window[b] = window_digest(
+                arr, plan.band_rows, plan.num_layers, b, plan.vertical_policy
+            )
+        # a clean band must be resident to splice — normally guaranteed by
+        # the pins on the previous frame's entries, but re-serve it if the
+        # cache was cleared/evicted externally (its window is unchanged,
+        # so recomputing it is pure cost, never a correctness issue)
+        clean = []
+        for b in range(num_bands):
+            if b in dirty:
+                continue
+            if self._cache.peek(self._key(plan, b, window[b])) is None:
+                dirty.add(b)
+            else:
+                clean.append(b)
+        self._verify_cover(plan, dirty, changed)
+        dirty_list = sorted(dirty)
+        hr_bands = None
+        if dirty_list:
+            slabs = band_slabs(
+                arr, plan.band_rows, plan.num_layers, dirty_list,
+                plan.vertical_policy,
+            )
+            fut = self._server.submit_bands(
+                slabs, dirty_list, plan=plan, model=self._model,
+                priority=self._priority,
+            )
+            self._inflight = fut
+            try:
+                hr_bands = np.asarray(fut.result())
+            finally:
+                self._inflight = None
+        # --- splice ----------------------------------------------------
+        # Pin-on-access (put/get with pin=True): this frame's bands are
+        # the next frame's splice sources, and the pin must be atomic
+        # with the insert/lookup — with a tiny or contended cache a
+        # separate pin() after the loop could find its entry already
+        # evicted.  On any failure mid-splice the partial pin set is
+        # released before re-raising.
+        out_dtype = (hr_bands.dtype if hr_bands is not None
+                     else session.output_dtype(plan, dtype))
+        out = np.empty(plan.hr_shape, out_dtype)
+        hr_rows = plan.band_rows * plan.scale
+        keys: List[tuple] = []
+        try:
+            for i, b in enumerate(dirty_list):
+                out[b * hr_rows:(b + 1) * hr_rows] = hr_bands[i]
+                key = self._key(plan, b, window[b])
+                self._cache.put(key, hr_bands[i], pin=True)
+                keys.append(key)
+            for b in clean:
+                key = self._key(plan, b, window[b])
+                rows = self._cache.get(key, pin=True)
+                if rows is None:  # pragma: no cover - pinned on entry
+                    raise RuntimeError(
+                        f"clean band {b} vanished from the output cache "
+                        "mid-splice (its previous-frame pin was released "
+                        "externally)"
+                    )
+                keys.append(key)
+                out[b * hr_rows:(b + 1) * hr_rows] = rows
+        except BaseException:
+            for key in keys:
+                self._cache.unpin(key)
+            raise
+        for key in self._pinned:
+            self._cache.unpin(key)
+        self._pinned = keys
+        self._account(plan, num_bands, len(dirty_list), arr, out)
+        self._prev_own = own
+        self._prev_window = window
+        self.frames += 1
+        return out
+
+    def _verify_cover(self, plan, dirty, changed) -> None:
+        """The plan_check splice rule, enforced before anything dispatches."""
+        # deferred: engine.temporal must stay importable without pulling
+        # the analysis package in at module-import time
+        from repro.analysis.plan_check import verify_delta_cover
+
+        errors = [
+            f for f in verify_delta_cover(
+                plan, sorted(dirty), changed_bands=sorted(changed)
+            )
+            if f.severity == "error"
+        ]
+        if errors:
+            self.session._temporal_counts["cover_violations"] += len(errors)
+            raise RuntimeError(
+                "delta splice invariant violated:\n"
+                + "\n".join(f.format() for f in errors)
+            )
+
+    def _account(self, plan, num_bands: int, served: int, arr, out) -> None:
+        """Per-frame reuse accounting (the ``temporal`` stats section).
+
+        The HBM-traffic model matches the paper's metric shape: LR slab
+        bytes read plus HR band bytes written, per frame — weights are
+        resident either way and excluded.
+        """
+        t = self.session._temporal_counts
+        slab_rows = band_input_rows(
+            plan.band_rows, plan.num_layers, plan.vertical_policy
+        )
+        lr_band_bytes = slab_rows * plan.width * plan.in_channels * arr.itemsize
+        hr_band_bytes = (
+            plan.band_rows * plan.scale * plan.width * plan.scale
+            * plan.in_channels * out.itemsize
+        )
+        t["frames"] += 1
+        t["bands_total"] += num_bands
+        t["bands_skipped"] += num_bands - served
+        t["band_rows_total"] += num_bands * plan.band_rows
+        t["band_rows_served"] += served * plan.band_rows
+        t["hbm_bytes_full"] += num_bands * (lr_band_bytes + hr_band_bytes)
+        t["hbm_bytes_served"] += served * (lr_band_bytes + hr_band_bytes)
+
+    def stats(self) -> dict:
+        """The owning session's ``temporal`` stats section."""
+        return self.session.temporal_stats()
+
+    def close(self) -> None:
+        """Release every cache pin (and cancel an in-flight dispatch, if
+        the stream was abandoned mid-serve).  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        fut = self._inflight
+        if fut is not None:
+            self._server.cancel(fut)
+            self._inflight = None
+        for key in self._pinned:
+            self._cache.unpin(key)
+        self._pinned = []
+
+    def __enter__(self) -> "DeltaSession":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

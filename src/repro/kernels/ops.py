@@ -26,6 +26,7 @@ __all__ = [
     "conv3x3",
     "tilted_fused_stack",
     "tilted_fused_frames",
+    "tilted_fused_band_stack",
     "pack_layers",
     "pack_stack",
     "PackedLayers",
@@ -274,6 +275,80 @@ def tilted_fused_frames(
             compute_dtype=compute_dtype,
         )
     return out.reshape(N, H, W, out.shape[-1])
+
+
+def tilted_fused_band_stack(
+    bands: jax.Array,
+    layers: Optional[Sequence[ConvLayer]] = None,
+    *,
+    tile_cols: int = 8,
+    vertical_policy: str = "zero",
+    row_bounds: Optional[jax.Array] = None,
+    chp: Optional[int] = None,
+    compute_dtype=None,
+    interpret: Optional[bool] = None,
+    packed: Optional[PackedLayers] = None,
+) -> jax.Array:
+    """Tilted fusion over an explicit band stack (k, rows, W, C0) -> (k, R, W, ChL).
+
+    The partial-band entry point for temporal delta serving: the caller
+    has already marshalled per-band input slabs (an arbitrary subset of
+    one or more frames' bands) and, under ``halo``, the matching
+    per-slab valid-row bounds in the ``core.fusion.halo_slabs``
+    geometry.  ``tilted_fused_frames`` cannot serve this case — its
+    internal ``halo_slabs`` would borrow margin rows from whatever band
+    happens to be adjacent in the stack, which for a subset is not the
+    spatial neighbor.
+
+    Under ``halo`` the slabs carry ``rows = R + 2L`` and the recompute
+    margin is cropped from the output; under ``zero``/``replicate`` the
+    slabs are the bare R rows.  The bands run on the kernel's sequential
+    band grid axis with scratch re-zeroed per band, so each output band
+    is byte-identical to the same band of a full-frame launch — the
+    invariant the delta path's bit-exact splice rests on.
+    """
+    if bands.ndim != 4:
+        raise ValueError(f"bands must be (k, rows, W, C0), got {bands.shape}")
+    if vertical_policy not in VERTICAL_POLICIES:
+        raise ValueError(
+            f"vertical_policy {vertical_policy!r} not in {VERTICAL_POLICIES}"
+        )
+    if packed is None:
+        if layers is None:
+            raise ValueError("pass either layers or packed")
+        packed = pack_stack(layers, chp, dtype=compute_dtype)
+    interpret = default_interpret() if interpret is None else interpret
+    if vertical_policy == "halo":
+        L = packed.num_layers
+        R = bands.shape[1] - 2 * L
+        if R <= 0:
+            raise ValueError(
+                f"halo slabs need rows > 2L; got rows={bands.shape[1]}, L={L}"
+            )
+        if row_bounds is None:
+            raise ValueError("halo band stacks require row_bounds")
+        out = _tilted_fused_bands(
+            bands,
+            packed,
+            tile_cols=tile_cols,
+            add_anchor=False,
+            anchor_repeats=9,
+            interpret=interpret,
+            row_policy="zero",
+            row_bounds=row_bounds,
+            compute_dtype=compute_dtype,
+        )
+        return out[:, L : L + R]  # crop the recompute margin
+    return _tilted_fused_bands(
+        bands,
+        packed,
+        tile_cols=tile_cols,
+        add_anchor=False,
+        anchor_repeats=9,
+        interpret=interpret,
+        row_policy=vertical_policy,
+        compute_dtype=compute_dtype,
+    )
 
 
 def conv3x3(

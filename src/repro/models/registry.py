@@ -16,6 +16,7 @@ weights.
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import functools
 import types
 from typing import Callable, Dict, Sequence, Tuple
@@ -98,8 +99,15 @@ def get_sr_model(name: str) -> SRModelSpec:
     try:
         return _SR_MODELS[name]
     except KeyError:
+        # name every accepted spelling (canonical names AND aliases) and
+        # suggest the closest one — a bare KeyError or a canonical-only
+        # list leaves "abpn-3x" users guessing at "abpn-x3"
+        known = sorted(_SR_MODELS)
+        close = difflib.get_close_matches(str(name), known, n=1)
+        hint = f" (did you mean {close[0]!r}?)" if close else ""
         raise ValueError(
-            f"unknown SR model {name!r}; available: {list(list_sr_models())}"
+            f"unknown SR model {name!r}{hint}; registered: "
+            f"{list(list_sr_models())}, aliases included: {known}"
         ) from None
 
 

@@ -245,7 +245,8 @@ def test_engine_serving_sources_are_clean():
 def test_lint_default_targets_exist():
     targets = concurrency_lint.default_lint_targets()
     assert [p.name for p in targets] == [
-        "server.py", "scheduler.py", "session.py", "resilience.py"
+        "server.py", "scheduler.py", "session.py", "band_diff.py",
+        "delta_stream.py", "output_cache.py", "resilience.py"
     ]
     assert all(p.exists() for p in targets)
 
